@@ -1,0 +1,51 @@
+"""Fig 6 & 7: CPU cost of the Map (serialize) and Reduce (accumulate)
+tasks vs number of servers, measured on THIS host.
+
+The paper measures C++ word-count on Intel E5-2630s; we measure the
+numpy-vectorized equivalent (tokenman: split a byte stream into items;
+reduce: bincount accumulate). Per-server data size = total/n, as in §4:
+with more servers each CPU does less work — the same 1/n decay the paper
+shows, which is exactly why the offload speed-up shrinks with n.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data.pipeline import wordcount_shards
+
+VOCAB = 50_000
+ITEM_BYTES = 8
+
+
+def _cpu_map_time(words: np.ndarray) -> float:
+    """Serialize: pack each item into a one-item 'packet' (header+payload)."""
+    t0 = time.perf_counter()
+    headers = np.empty((words.size, 2), np.uint32)
+    headers[:, 0] = 0x9E3779B1  # preamble/app/routing ids
+    headers[:, 1] = words.view(np.uint32) if words.dtype == np.uint32 else words.astype(np.uint32)
+    buf = headers.tobytes()  # the wire image
+    assert len(buf) == words.size * 8
+    return time.perf_counter() - t0
+
+
+def _cpu_reduce_time(words: np.ndarray) -> float:
+    t0 = time.perf_counter()
+    counts = np.bincount(words, minlength=VOCAB)
+    assert counts.sum() == words.size
+    return time.perf_counter() - t0
+
+
+def run(total_mb: int = 64) -> list[tuple[str, float, str]]:
+    rows = []
+    total_items = total_mb * (1 << 20) // ITEM_BYTES
+    for n in (3, 6, 12, 24):
+        shard = wordcount_shards(total_items, n, VOCAB, seed=1)[0]
+        tm = _cpu_map_time(shard)
+        tr = _cpu_reduce_time(shard)
+        rows.append((f"cpu_map.n{n}", tm * 1e6,
+                     f"per-server {shard.size*8>>20}MB map={tm*1e3:.1f}ms"))
+        rows.append((f"cpu_reduce.n{n}", tr * 1e6,
+                     f"reduce={tr*1e3:.1f}ms items={shard.size}"))
+    return rows

@@ -1,0 +1,51 @@
+"""Per-kernel timing: jitted oracle µs/call on CPU + Pallas(interpret)
+correctness spot-check. Wall-clock on TPU is out of scope (no hardware);
+the structural VMEM/MXU analysis lives in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rs = np.random.RandomState(0)
+
+    v = jnp.asarray(rs.randn(16384, 64).astype(np.float32))
+    ids = jnp.asarray(rs.randint(0, 64, 16384).astype(np.int32))
+    sr = jax.jit(lambda a, b: ref.segment_reduce(a, b, 64))
+    rows.append(("kernels.segment_reduce.ref", _time(sr, v, ids),
+                 "n=16384 d=64 nseg=64 (oracle)"))
+    got = ops.segment_reduce(v, ids, 64, interpret=True)
+    err = float(jnp.max(jnp.abs(got - sr(v, ids))))
+    rows.append(("kernels.segment_reduce.allclose", 0.0, f"max_err={err:.2e}"))
+
+    t = jnp.asarray(rs.randint(0, 100000, 65536).astype(np.int32))
+    hp = jax.jit(lambda a: ref.hash_partition(a, 16))
+    rows.append(("kernels.hash_partition.ref", _time(hp, t), "n=65536 buckets=16"))
+
+    acc = jnp.asarray(rs.randn(1 << 20).astype(np.float32))
+    wire = jnp.asarray(rs.randn(1 << 20).astype(np.float32)).astype(jnp.bfloat16)
+    rf = jax.jit(ref.ring_fused_step)
+    rows.append(("kernels.ring_fused_step.ref", _time(rf, acc, wire), "n=1M"))
+
+    q = jnp.asarray(rs.randn(1, 4, 1024, 64).astype(np.float32))
+    fa = jax.jit(lambda a: ref.flash_attention(a, a, a, causal=True))
+    rows.append(("kernels.flash_attention.ref", _time(fa, q, iters=5),
+                 "b1 h4 s1024 d64 causal"))
+    return rows

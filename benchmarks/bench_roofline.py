@@ -1,0 +1,50 @@
+"""§Roofline table from the dry-run sweep JSON (results_dryrun_*.json).
+
+Run ``python -m repro.launch.dryrun --all --out results_dryrun_single.json``
+first (launch/dryrun.py owns the 512-device override); this bench only
+aggregates, so the main process keeps 1 device.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def summarize(path: str) -> list[tuple[str, float, str]]:
+    if not os.path.exists(path):
+        return [(f"roofline.{os.path.basename(path)}", 0.0, "missing — run dryrun --all")]
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    for r in recs:
+        cell = f"{r.get('arch')}/{r.get('shape')}"
+        if "skipped" in r:
+            rows.append((f"roofline.{cell}", 0.0, "SKIP " + r["skipped"][:40]))
+            continue
+        if "error" in r:
+            rows.append((f"roofline.{cell}", 0.0, "ERROR " + r["error"][:60]))
+            continue
+        if "t_compute_s" not in r:
+            rows.append((f"roofline.{cell}", 0.0,
+                         f"compiled={r.get('compiled')} (no probes)"))
+            continue
+        rows.append((
+            f"roofline.{cell}",
+            max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+            f"bottleneck={r['bottleneck']} "
+            f"tc={r['t_compute_s']*1e3:.1f}ms tm={r['t_memory_s']*1e3:.1f}ms "
+            f"tx={r['t_collective_s']*1e3:.1f}ms "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"roofline={r.get('roofline_fraction', 0):.3f} "
+            f"hbm_peak={r['peak_hbm_bytes_per_dev']/2**30:.2f}GiB",
+        ))
+    return rows
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for f in ("results_dryrun_single.json", "results_dryrun_multi.json"):
+        rows.extend(summarize(os.path.join(REPO, f)))
+    return rows

@@ -1,0 +1,40 @@
+"""§3 / Eq (1): serialization cost model.
+
+Rows: N (time slices) → sustainable ingest from the discrete simulator vs
+the closed form C/(1+1/N)^N, converging to C/e = 367.88 Mbps for GbE —
+the paper's Scenario-3 rate-limiter value. Plus the α–β chunk model's
+optimal gradient-bucket size for a v5e pod (the TPU adaptation of the
+same trade-off).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import serialization as ser
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    C = 1000.0  # Mbps, the paper's GbE
+    t0 = time.perf_counter_ns()
+    for N in (1, 10, 100, 1000, 10000, 100000):
+        closed = ser.compounding_equilibrium(C, N)
+        sim = ser.max_sustainable_ingest(C, N)
+        rows.append((f"serialization.eq1_N{N}", (time.perf_counter_ns() - t0) / 1e3,
+                     f"sim={sim:.3f}Mbps closed={closed:.3f}Mbps"))
+    rows.append(("serialization.c_over_e", 0.0,
+                 f"C/e={C/math.e:.2f}Mbps paper=367.92Mbps penalty={ser.throughput_penalty(C):.2f}Mbps"))
+    # item-level refinement (beyond paper): penalty depends on k
+    for k in (2, 8, 23):
+        rows.append((f"serialization.item_level_k{k}", 0.0,
+                     f"sustainable={ser.item_level_sustainable_ingest(C, k):.1f}Mbps(pkts)"))
+    # TPU adaptation: bucket sizing for a 1B-param bf16 gradient on 16 hops
+    link = ser.LinkModel()
+    b = ser.optimal_bucket_bytes(2e9, 16, link)
+    c = ser.optimal_chunks(2e9, 16, link)
+    rows.append(("serialization.bucket_model", 0.0,
+                 f"opt_bucket={b/2**20:.1f}MiB opt_chunks={c} "
+                 f"t_1chunk={ser.ring_all_reduce_time(2e9,16,link,1)*1e3:.2f}ms "
+                 f"t_opt={ser.ring_all_reduce_time(2e9,16,link,c)*1e3:.2f}ms"))
+    return rows

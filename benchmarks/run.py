@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  bench_serialization   — §3 Eq (1) table
+  bench_cpu_map_reduce  — Fig 6 & 7 (measured CPU map/reduce)
+  bench_scenarios       — Fig 4 & 5 (S1/S2/S3 JCT speed-ups)
+  bench_collectives     — in-transit vs endpoint aggregation (TPU form)
+  bench_kernels         — Pallas kernel oracles + allclose
+  bench_roofline        — §Roofline aggregation of the dry-run sweeps
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    bench_collectives,
+    bench_cpu_map_reduce,
+    bench_kernels,
+    bench_roofline,
+    bench_scenarios,
+    bench_serialization,
+)
+
+MODULES = [
+    ("serialization", bench_serialization),
+    ("cpu_map_reduce", bench_cpu_map_reduce),
+    ("scenarios", bench_scenarios),
+    ("collectives", bench_collectives),
+    ("kernels", bench_kernels),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = 0
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, mod in MODULES:
+        if only and only != name:
+            continue
+        try:
+            for row, us, derived in mod.run():
+                print(f"{row},{us:.2f},{derived}")
+        except Exception as e:
+            failed += 1
+            print(f"{name}.ERROR,0,{e!r}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

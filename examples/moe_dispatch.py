@@ -1,0 +1,66 @@
+"""MoE token dispatch IS the paper's Word-Count (map → shuffle → reduce).
+
+Runs the granite-moe smoke model's MoE layer in both dispatch modes —
+``a2a`` (the word-count shuffle: tokens hash to their expert 'reducer'
+through one all_to_all and come back combined) and ``replicated`` (the
+endpoint baseline) — and shows they compute the same function while
+moving very different bytes.
+
+    PYTHONPATH=src python examples/moe_dispatch.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.models import moe as moe_mod
+from repro.models.common import init_params, tree_partition_specs
+from repro.models.parallel import ShardEnv
+
+
+def main():
+    cfg0 = get_smoke_config("granite_moe_1b_a400m")
+    cfg = dataclasses.replace(cfg0, moe=dataclasses.replace(
+        cfg0.moe, capacity_factor=8.0, router_aux_weight=0.0))
+    mesh = jax.make_mesh((1, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    env = ShardEnv(model_size=4, data_size=1, tp=4)
+    specs = {"moe": moe_mod.moe_specs(cfg, env)}
+    params = init_params(specs, 0, jnp.float32, env)
+    pspec = tree_partition_specs(specs, env.fsdp_axes)
+    x = np.random.RandomState(0).randn(2, 16, cfg.d_model).astype(np.float32)
+
+    def apply(mode):
+        @partial(jax.shard_map, mesh=mesh, in_specs=(pspec, P()), out_specs=P(),
+                 check_vma=False)
+        def f(p, xx):
+            fn = moe_mod.moe_apply_a2a if mode == "a2a" else moe_mod.moe_apply_replicated
+            y, _ = fn(p["moe"], xx, cfg, env)
+            return y
+        return np.asarray(f(params, jnp.asarray(x)))
+
+    ya, yr = apply("a2a"), apply("replicated")
+    err = np.abs(ya - yr).max() / (np.abs(yr).max() + 1e-9)
+    print(f"a2a (word-count shuffle) vs replicated (endpoint): rel err {err:.2e}")
+    assert err < 2e-2
+
+    n_tok = x.shape[0] * x.shape[1]
+    d = cfg.d_model
+    bytes_a2a = 3 * (n_tok // 4) * cfg.moe.top_k * d * 4  # send+recv+return per rank
+    bytes_rep = 0  # replicated: every rank already has every token (paid upstream)
+    print(f"tokens routed through the shuffle per rank: {(n_tok // 4) * cfg.moe.top_k}")
+    print(f"shuffle wire bytes/rank ≈ {bytes_a2a/1e3:.1f} kB; "
+          f"replicated pays {n_tok * d * 4 / 1e3:.1f} kB of token replication instead")
+    print("OK — expert dispatch ran as an in-network map→shuffle→reduce.")
+
+
+if __name__ == "__main__":
+    main()

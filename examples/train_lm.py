@@ -1,0 +1,67 @@
+"""End-to-end LM training with in-network gradient aggregation.
+
+Trains a reduced qwen-family model on 8 virtual devices with the paper's
+Scenario-2 (ring, reduce-in-transit) aggregation, checkpointing along the
+way; loss drops below ln(vocab) as the model learns the synthetic Markov
+structure. Pass ``--full`` for the ~100M-parameter variant (slow on CPU).
+
+    PYTHONPATH=src python examples/train_lm.py [--full]
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="~100M params (slow)")
+    ap.add_argument("--steps", type=int, default=60)
+    args_in = ap.parse_args()
+
+    from repro.configs import get_smoke_config
+    from repro.launch.train import parser, run
+
+    ckpt = tempfile.mkdtemp(prefix="p4mr_ck_")
+    argv = [
+        "--arch", "qwen1_5_0_5b", "--smoke", "--steps", str(args_in.steps),
+        "--mesh", "4,2", "--scenario", "s2_in_net",
+        "--global-batch", "16", "--seq", "64", "--microbatches", "2",
+        "--ckpt", ckpt, "--ckpt-every", "20", "--log-every", "10",
+    ]
+    args = parser().parse_args(argv)
+    if args_in.full:
+        # ~100M: d=512, 8 layers, vocab 32k — the "train a ~100M model" driver
+        import repro.configs.qwen1_5_0_5b as q
+
+        base = q.CONFIG
+        cfg100 = dataclasses.replace(
+            base, name="qwen-100m", n_layers=8, d_model=512, n_heads=8,
+            n_kv_heads=8, d_ff=1408, vocab=32768)
+        import repro.launch.train as T
+
+        orig = T.build
+
+        def build_patched(cfg, mesh, a):
+            return orig(cfg100, mesh, a)
+
+        T.build = build_patched
+    losses = run(args)
+    import math
+
+    import numpy as np
+
+    print(f"\nfirst-5 loss {np.mean(losses[:5]):.4f} -> last-5 {np.mean(losses[-5:]):.4f} "
+          f"(ln V = {math.log(get_smoke_config('qwen1_5_0_5b').vocab):.3f})")
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), "did not learn"
+    print("OK — gradients were aggregated in transit (Scenario 2) throughout.")
+
+
+if __name__ == "__main__":
+    main()

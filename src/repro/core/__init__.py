@@ -1,0 +1,36 @@
+"""repro.core — the paper's contribution: p4mr for TPU pods.
+
+Public surface:
+    Program / dsl.compile_source     — build p4mr programs (§5)
+    place / build_routes / compile_program — the compiler pipeline (§5)
+    wordcount_step                   — §2 running example on a mesh
+    collectives.*                    — in-transit ring/tree/hierarchical
+    scenarios.aggregate              — S1/S2/S3 (+native/hierarchical) DP sync
+    serialization.*                  — §3 cost model (r = C/e) + chunk model
+"""
+from repro.core import collectives, primitives, serialization
+from repro.core.codelet import compile_program, execute_reference
+from repro.core.dag import Program, ProgramError, paper_example
+from repro.core.dsl import PAPER_SOURCE, compile_source, parse_ast
+from repro.core.placement import Placement, PlacementError, place
+from repro.core.routing import RoutingTable, build_routes
+from repro.core.scenarios import Scenario, aggregate, wire_bytes_per_device
+from repro.core.topology import SwitchTopology, TorusTopology, paper_topology, production_torus
+from repro.core.wordcount import (
+    local_histogram,
+    wordcount_host_baseline,
+    wordcount_reference,
+    wordcount_step,
+)
+
+__all__ = [
+    "collectives", "primitives", "serialization",
+    "compile_program", "execute_reference",
+    "Program", "ProgramError", "paper_example",
+    "PAPER_SOURCE", "compile_source", "parse_ast",
+    "Placement", "PlacementError", "place",
+    "RoutingTable", "build_routes",
+    "Scenario", "aggregate", "wire_bytes_per_device",
+    "SwitchTopology", "TorusTopology", "paper_topology", "production_torus",
+    "local_histogram", "wordcount_host_baseline", "wordcount_reference", "wordcount_step",
+]

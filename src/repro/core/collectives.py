@@ -1,0 +1,224 @@
+"""In-transit collectives: the paper's switch-reducer as ppermute schedules.
+
+Scenario-2 ("Reduce in the network") maps to reduction performed hop-by-hop
+while the data moves: a **ring reduce-scatter** in which every hop receives
+a partial, adds its own contribution, and forwards — exactly the paper's
+stateful switch reducer. Scenario-3 additionally applies a per-hop *map*
+(on-the-wire compression) before forwarding.
+
+Everything here runs inside ``shard_map`` and is expressed with
+``jax.lax.ppermute`` so each hop is explicit in the HLO (one
+``collective-permute`` per step) — the roofline harness counts them.
+
+All functions take ``axis_name`` (a mesh axis inside shard_map) and
+optionally ``groups`` (axis_index_groups) so TP/EP subgroups of a physical
+axis can run their own rings (see models/parallel.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+MapFn = Callable[[Array], Array]
+
+
+def _axis_size(axis_name, groups) -> int:
+    if groups is not None:
+        sizes = {len(g) for g in groups}
+        if len(sizes) != 1:
+            raise ValueError("all groups must have equal size")
+        return sizes.pop()
+    return lax.axis_size(axis_name)
+
+
+def _ring_perm(axis_name, groups, step: int = 1):
+    """Permutation sending rank i -> i+step within each ring (group)."""
+    if groups is None:
+        p = lax.axis_size(axis_name)
+        return [(i, (i + step) % p) for i in range(p)]
+    perm = []
+    for g in groups:
+        p = len(g)
+        for k, src in enumerate(g):
+            perm.append((src, g[(k + step) % p]))
+    return perm
+
+
+def _group_rank(axis_name, groups):
+    """This device's rank within its ring (0..p-1)."""
+    idx = lax.axis_index(axis_name)
+    if groups is None:
+        return idx
+    p = len(groups[0])
+    # groups are lists of axis indices; build a lookup table
+    table = jnp.zeros((sum(len(g) for g in groups),), dtype=jnp.int32)
+    for g in groups:
+        for k, src in enumerate(g):
+            table = table.at[src].set(k)
+    return table[idx]
+
+
+def ring_reduce_scatter(
+    x: Array,
+    axis_name,
+    *,
+    groups: Sequence[Sequence[int]] | None = None,
+    wire_map: MapFn | None = None,
+    unmap: MapFn | None = None,
+) -> Array:
+    """In-transit ring reduce-scatter over leading dim (must equal ring size).
+
+    ``x``: (p, ...) — p chunks per device. Returns this rank's fully
+    reduced chunk ``sum_over_ranks(x[rank])`` with shape ``x.shape[1:]``.
+
+    Schedule (p−1 steps): at step s, rank r forwards the partial of chunk
+    (r−1−s) mod p and accumulates the received partial of chunk
+    (r−2−s) mod p with its local copy — each hop computes, i.e. the
+    paper's switch-reducer. ``wire_map``/``unmap`` implement the S3 fused
+    map (e.g. bf16 on the wire, fp32 accumulate).
+    """
+    p = _axis_size(axis_name, groups)
+    if x.shape[0] != p:
+        raise ValueError(f"leading dim {x.shape[0]} != ring size {p}")
+    if p == 1:
+        return x[0]
+    r = _group_rank(axis_name, groups)
+    perm = _ring_perm(axis_name, groups, 1)
+    wire = wire_map or (lambda a: a)
+    dewire = unmap or (lambda a: a)
+
+    # statically unrolled (p−1 is small and known): every hop is visible in
+    # the HLO, so cost analysis & the roofline count each ppermute exactly
+    partial = lax.dynamic_index_in_dim(x, (r - 1) % p, keepdims=False)
+    for s in range(p - 1):
+        recv = lax.ppermute(wire(partial), axis_name, perm)
+        k = (r - 2 - s) % p
+        partial = dewire(recv) + lax.dynamic_index_in_dim(x, k, keepdims=False)
+    return partial
+
+
+def ring_all_gather(
+    x: Array,
+    axis_name,
+    *,
+    groups: Sequence[Sequence[int]] | None = None,
+) -> Array:
+    """In-transit ring all-gather: each rank contributes ``x`` (chunk shape),
+    returns (p, ...) with chunk k from rank k. p−1 ppermute hops."""
+    p = _axis_size(axis_name, groups)
+    if p == 1:
+        return x[None]
+    r = _group_rank(axis_name, groups)
+    perm = _ring_perm(axis_name, groups, 1)
+    out = jnp.zeros((p,) + x.shape, x.dtype)
+    out = lax.dynamic_update_index_in_dim(out, x, r, 0)
+
+    cur = x
+    for s in range(p - 1):  # statically unrolled: exact HLO hop accounting
+        cur = lax.ppermute(cur, axis_name, perm)
+        # after s+1 forwards, ``cur`` is the chunk of rank (r - s - 1)
+        out = lax.dynamic_update_index_in_dim(out, cur, (r - s - 1) % p, 0)
+    return out
+
+
+def ring_all_reduce(
+    x: Array,
+    axis_name,
+    *,
+    groups: Sequence[Sequence[int]] | None = None,
+    wire_map: MapFn | None = None,
+    unmap: MapFn | None = None,
+) -> Array:
+    """RS + AG ring all-reduce of an arbitrary-shaped tensor.
+
+    Pads the flattened tensor to a multiple of p, runs the in-transit
+    reduce-scatter then all-gather, unpads, restores shape. 2(p−1) hops,
+    2·S·(p−1)/p bytes on the wire per device — the roofline-visible cost.
+    """
+    p = _axis_size(axis_name, groups)
+    if p == 1:
+        return x
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % p
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(p, -1)
+    mine = ring_reduce_scatter(chunks, axis_name, groups=groups, wire_map=wire_map, unmap=unmap)
+    full = ring_all_gather(mine, axis_name, groups=groups).reshape(-1)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(x.shape)
+
+
+def tree_all_reduce(
+    x: Array,
+    axis_name,
+    *,
+    groups: Sequence[Sequence[int]] | None = None,
+) -> Array:
+    """Recursive-doubling all-reduce (log2 p exchange+add rounds).
+
+    Latency-optimal for small payloads (p4mr's scalar SUM labels); requires
+    power-of-two ring size. Each round is one ppermute pair + add — again,
+    compute at every hop.
+    """
+    p = _axis_size(axis_name, groups)
+    if p & (p - 1):
+        raise ValueError(f"tree_all_reduce needs power-of-two size, got {p}")
+    step = 1
+    while step < p:
+        # pair exchange at distance ``step`` within each ring
+        if groups is None:
+            perm = [(i, i ^ step) for i in range(p)]
+        else:
+            perm = []
+            for g in groups:
+                for k, src in enumerate(g):
+                    perm.append((src, g[k ^ step]))
+        x = x + lax.ppermute(x, axis_name, perm)
+        step *= 2
+    return x
+
+
+def hierarchical_all_reduce(
+    x: Array,
+    inner_axis,
+    outer_axis,
+    *,
+    wire_map: MapFn | None = None,
+    unmap: MapFn | None = None,
+) -> Array:
+    """Two-level all-reduce for the multi-pod mesh (ICI ring within a pod,
+    DCN exchange across pods): ring-RS over ``inner_axis``, tree-AR of the
+    shards over ``outer_axis``, ring-AG back over ``inner_axis``.
+
+    Cross-pod traffic is S/p_inner instead of S — the reason hierarchical
+    wins when the outer links are slow (paper: place reducers to minimize
+    expensive hops).
+    """
+    p = lax.axis_size(inner_axis)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % p
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(p, -1)
+    mine = ring_reduce_scatter(chunks, inner_axis, wire_map=wire_map, unmap=unmap)
+    mine = lax.psum(mine, outer_axis)
+    full = ring_all_gather(mine, inner_axis).reshape(-1)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(x.shape)
+
+
+# Wire-compression maps for Scenario 3 (map fused into the hop).
+def bf16_wire(x: Array) -> Array:
+    return x.astype(jnp.bfloat16)
+
+
+def fp32_unwire(x: Array) -> Array:
+    return x.astype(jnp.float32)

@@ -1,0 +1,201 @@
+"""Parser for the paper's p4mr surface syntax (§5.2).
+
+The paper implements a "raw code compiler" with flex & bison that parses
+
+    A := store < uint_64 > ("ip_h1:path_A");
+    B := store < uint_64 > ("ip_h2:path_B");
+    C := store < uint_64 > ("ip_h3:path_C");
+    D := SUM(A, B);
+    E := SUM(C, D);
+
+into a JSON AST, which a separate pass converts to a DAG. We reproduce the
+same two stages with a hand-written lexer + recursive-descent parser:
+``parse_ast`` emits the JSON-able AST (label, function type, parameters —
+matching the paper's description), ``ast_to_program`` builds the
+``dag.Program``. Extensions beyond the paper's grammar (MAP/KEYBY/COLLECT,
+more dtypes, more reduce kinds) use the same call syntax.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Any
+
+from repro.core import dag, primitives as prim
+
+_TOKEN_RE = re.compile(
+    r"""
+    (?P<ws>\s+|\#[^\n]*)
+  | (?P<assign>:=)
+  | (?P<lt><) | (?P<gt>>)
+  | (?P<lparen>\() | (?P<rparen>\)) | (?P<comma>,) | (?P<semi>;)
+  | (?P<string>"[^"]*")
+  | (?P<int>\d+)
+  | (?P<ident>[A-Za-z_][A-Za-z0-9_]*)
+    """,
+    re.VERBOSE,
+)
+
+# dtype spellings: the paper writes ``uint_64``; normalize to numpy-ish.
+_DTYPE_ALIASES = {
+    "uint_64": "uint64",
+    "uint_32": "uint32",
+    "int_32": "int32",
+    "float_32": "float32",
+    "bf_16": "bfloat16",
+    "float_64": "float64",
+}
+
+
+class DSLSyntaxError(ValueError):
+    pass
+
+
+def _lex(src: str) -> list[tuple[str, str]]:
+    out, pos = [], 0
+    while pos < len(src):
+        m = _TOKEN_RE.match(src, pos)
+        if not m:
+            raise DSLSyntaxError(f"lex error at offset {pos}: {src[pos:pos+20]!r}")
+        pos = m.end()
+        kind = m.lastgroup
+        if kind != "ws":
+            out.append((kind, m.group()))
+    out.append(("eof", ""))
+    return out
+
+
+class _Parser:
+    def __init__(self, tokens: list[tuple[str, str]]):
+        self.toks = tokens
+        self.i = 0
+
+    def peek(self) -> tuple[str, str]:
+        return self.toks[self.i]
+
+    def eat(self, kind: str) -> str:
+        k, v = self.toks[self.i]
+        if k != kind:
+            raise DSLSyntaxError(f"expected {kind}, got {k} {v!r} (token {self.i})")
+        self.i += 1
+        return v
+
+    def parse(self) -> list[dict[str, Any]]:
+        stmts = []
+        idx = 0
+        while self.peek()[0] != "eof":
+            stmts.append(self.statement(idx))
+            idx += 1
+        return stmts
+
+    def statement(self, idx: int) -> dict[str, Any]:
+        label = self.eat("ident")
+        self.eat("assign")
+        fn = self.eat("ident")
+        node: dict[str, Any] = {"index": idx, "label": label, "function": fn.lower(), "params": {}}
+        if fn.lower() == "store":
+            # store < dtype > ("host:path" [, items])
+            self.eat("lt")
+            dtype = self.eat("ident")
+            self.eat("gt")
+            self.eat("lparen")
+            locator = self.eat("string").strip('"')
+            if ":" not in locator:
+                raise DSLSyntaxError(f"store locator must be 'host:path', got {locator!r}")
+            host, path = locator.split(":", 1)
+            items = 0
+            if self.peek()[0] == "comma":
+                self.eat("comma")
+                items = int(self.eat("int"))
+            self.eat("rparen")
+            node["params"] = {
+                "dtype": _DTYPE_ALIASES.get(dtype, dtype),
+                "host": host,
+                "path": path,
+                "items": items,
+            }
+        else:
+            # FN(arg, arg, ...) where args are idents / strings / ints
+            self.eat("lparen")
+            args: list[Any] = []
+            while self.peek()[0] != "rparen":
+                k, v = self.peek()
+                if k == "ident":
+                    args.append(self.eat("ident"))
+                elif k == "string":
+                    args.append(self.eat("string").strip('"'))
+                elif k == "int":
+                    args.append(int(self.eat("int")))
+                else:
+                    raise DSLSyntaxError(f"bad argument token {k} {v!r}")
+                if self.peek()[0] != "rparen":
+                    self.eat("comma")  # commas are mandatory between args
+            self.eat("rparen")
+            node["params"] = {"args": args}
+        self.eat("semi")
+        return node
+
+
+def parse_ast(src: str) -> list[dict[str, Any]]:
+    """Source text → JSON-able AST (paper: flex/bison → json AST)."""
+    return _Parser(_lex(src)).parse()
+
+
+def ast_to_json(ast: list[dict[str, Any]]) -> str:
+    return json.dumps(ast, indent=2)
+
+
+_REDUCE_KINDS = {
+    "sum": prim.ReduceKind.SUM,
+    "max": prim.ReduceKind.MAX,
+    "min": prim.ReduceKind.MIN,
+    "count": prim.ReduceKind.COUNT,
+}
+
+
+def ast_to_program(ast: list[dict[str, Any]]) -> dag.Program:
+    """AST → dependency DAG (paper: dependency graph parser)."""
+    p = dag.Program()
+    for stmt in ast:
+        label, fn, params = stmt["label"], stmt["function"], stmt["params"]
+        if fn == "store":
+            p.store(label, host=params["host"], path=params["path"],
+                    dtype=params["dtype"], items=params.get("items", 0))
+        elif fn in _REDUCE_KINDS:
+            args = [str(a) for a in params["args"]]
+            if not args:
+                raise dag.ProgramError(f"{fn.upper()}() needs at least one source")
+            p.reduce(label, *args, kind=_REDUCE_KINDS[fn])
+        elif fn == "map":
+            args = params["args"]
+            if len(args) != 2:
+                raise dag.ProgramError("MAP(src, fn_name) takes exactly 2 args")
+            p.map(label, str(args[0]), fn_name=str(args[1]))
+        elif fn == "keyby":
+            args = params["args"]
+            if len(args) != 2:
+                raise dag.ProgramError("KEYBY(src, num_buckets) takes exactly 2 args")
+            p.key_by(label, str(args[0]), num_buckets=int(args[1]))
+        elif fn == "collect":
+            args = params["args"]
+            if len(args) != 2:
+                raise dag.ProgramError("COLLECT(src, sink_host) takes exactly 2 args")
+            p.collect(label, str(args[0]), sink_host=str(args[1]))
+        else:
+            raise dag.ProgramError(f"unknown operation {fn!r}")
+    p.validate()
+    return p
+
+
+def compile_source(src: str) -> dag.Program:
+    """One-shot: DSL text → validated Program."""
+    return ast_to_program(parse_ast(src))
+
+
+PAPER_SOURCE = """
+A := store<uint_64>("ip_h1:path_A");
+B := store<uint_64>("ip_h2:path_B");
+C := store<uint_64>("ip_h3:path_C");
+D := SUM(A, B);
+E := SUM(C, D);
+"""

@@ -1,0 +1,78 @@
+"""Cross-device associative scan: recurrent state computed *in transit*.
+
+For linear recurrences h_t = a_t ⊙ h_{t−1} + b_t (RG-LRU, Mamba2's chunk
+states) with the sequence sharded across devices, the boundary state each
+device needs is a fold of every earlier device's chunk summary. Instead of
+gathering all summaries to an endpoint (Scenario 1 thinking), the summary
+*packets* travel the ring and are combined at every hop — the recurrence
+itself is computed by the network, the purest form of the paper's idea.
+
+``ring_exclusive_scan`` uses log₂(p) doubling hops (each hop combines, so
+it is still in-transit compute — just a tree of switches rather than a
+chain); ``sequence_parallel_linear_scan`` applies it to a sharded
+recurrence and matches a single-device ``lax.associative_scan`` exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _combine(left, right):
+    """(A, S) summaries: apply 'left' then 'right' segment.
+    h ↦ A_r·(A_l·h + S_l) + S_r."""
+    a_l, s_l = left
+    a_r, s_r = right
+    return a_l * a_r, a_r * s_l + s_r
+
+
+def ring_exclusive_scan(a_prod, s_sum, axis_name):
+    """Exclusive device-prefix fold of per-device (A, S) chunk summaries.
+
+    Returns, on device r, the fold of summaries of devices 0..r−1
+    (identity (1, 0) on device 0). log2(p) ppermute hops; requires
+    power-of-two ring size.
+    """
+    p = lax.axis_size(axis_name)
+    if p & (p - 1):
+        raise ValueError(f"ring_exclusive_scan needs power-of-two ring, got {p}")
+    r = lax.axis_index(axis_name)
+    # F(k) on device r = fold of devices [r-k, r-1] (identity where r-k < 0)
+    ident = (jnp.ones_like(a_prod), jnp.zeros_like(s_sum))
+    # F(1): the immediate left neighbour's summary
+    k = 1
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    fa = lax.ppermute(a_prod, axis_name, perm)
+    fs = lax.ppermute(s_sum, axis_name, perm)
+    valid = r >= 1
+    F = (jnp.where(valid, fa, ident[0]), jnp.where(valid, fs, ident[1]))
+    while k < p:
+        # F(2k)_r = combine(F(k)_{r-k}, F(k)_r)
+        perm_k = [(i, (i + k) % p) for i in range(p)]
+        ga = lax.ppermute(F[0], axis_name, perm_k)
+        gs = lax.ppermute(F[1], axis_name, perm_k)
+        # the shifted fold covers [r-2k, r-k-1]; it exists iff r-k >= 1
+        use = r - k >= 1
+        left = (jnp.where(use, ga, ident[0]), jnp.where(use, gs, ident[1]))
+        F = _combine(left, F)
+        k *= 2
+    return F
+
+
+def sequence_parallel_linear_scan(a, b, axis_name):
+    """h_t = a_t·h_{t−1} + b_t over a sequence sharded on ``axis_name``.
+
+    a, b: (s_local, ...) local chunks (device r holds positions
+    [r·s_local, (r+1)·s_local)). Returns local h chunk, bit-matching the
+    unsharded ``lax.associative_scan`` composition.
+    """
+    def op(l, r_):
+        return _combine(l, r_)
+
+    # local inclusive scan: (ha_t, hb_t) = fold of local positions [0..t]
+    ha, hb = lax.associative_scan(op, (a, b), axis=0)
+    # device summary = last element; exclusive device-prefix in transit
+    _, h_in = ring_exclusive_scan(ha[-1], hb[-1], axis_name)
+    # h_t = ha_t · h_in + hb_t  (apply each local fold to the boundary state)
+    return hb + ha * h_in

@@ -1,0 +1,133 @@
+"""§4 scenarios as first-class gradient-aggregation strategies.
+
+The paper's three scenarios, recast for data-parallel training — the
+framework's flagship use of in-network computation:
+
+* ``S1_HOST``      — Map+Reduce at the endpoints: all-gather every worker's
+                     gradient, reduce locally. p× wire bytes; the baseline.
+* ``S2_IN_NET``    — Reduce in the network: ring reduce-scatter+all-gather
+                     built from explicit ppermute hops (collectives.py) —
+                     every hop accumulates, the switch-reducer.
+* ``S3_IN_NET_MAP``— Map+Reduce in the network: per-hop wire compression
+                     (bf16 "serialization") fused into the ring, buckets
+                     sized by the §3-derived chunk model.
+* ``NATIVE``       — beyond-paper: XLA's fused all-reduce (psum). On real
+                     TPUs this is itself an in-network ring — the paper's
+                     thesis, implemented in hardware — and is the fastest
+                     path; kept separate so the roofline shows the delta.
+* ``HIERARCHICAL`` — multi-pod: in-transit ring within the pod (ICI), one
+                     small exchange across pods (DCN), gather back.
+
+All strategies produce bitwise-comparable means (S3 within compression
+tolerance); tests/test_scenarios.py checks them against each other on an
+8-device CPU mesh.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+from repro.core import serialization as ser
+
+
+class Scenario(enum.Enum):
+    S1_HOST = "s1_host"
+    S2_IN_NET = "s2_in_net"
+    S3_IN_NET_MAP = "s3_in_net_map"
+    NATIVE = "native"
+    HIERARCHICAL = "hierarchical"
+
+
+def _tree_map(f, tree):
+    return jax.tree_util.tree_map(f, tree)
+
+
+def _mean_scale(axis_names) -> float:
+    n = 1
+    for a in axis_names:
+        n *= lax.axis_size(a)
+    return 1.0 / n
+
+
+def aggregate(
+    grads: Any,
+    scenario: Scenario | str,
+    *,
+    data_axis: str = "data",
+    pod_axis: str | None = None,
+    rep_groups=None,
+    rep_axis: str | None = None,
+) -> Any:
+    """Aggregate (mean) a gradient pytree across the DP axes, in-network
+    or at the endpoint per ``scenario``. Must be called inside shard_map.
+
+    ``rep_groups``/``rep_axis``: optional replica subgroups of the model
+    axis (see models/parallel.py) whose gradients also need summing; they
+    always use a cheap psum (tiny group, latency-bound).
+    """
+    scenario = Scenario(scenario)
+    axes = [data_axis] + ([pod_axis] if pod_axis else [])
+    scale = _mean_scale(axes)
+
+    if rep_axis is not None and rep_groups is not None:
+        grads = _tree_map(
+            lambda g: lax.psum(g, rep_axis, axis_index_groups=rep_groups), grads
+        )
+
+    if scenario is Scenario.NATIVE:
+        summed = lax.psum(grads, tuple(axes))
+        return _tree_map(lambda g: g * scale, summed)
+
+    if scenario is Scenario.S1_HOST:
+        def host_reduce(g):
+            for a in axes:
+                g = lax.all_gather(g, a, tiled=False).sum(axis=0)  # endpoint compute
+            return g * scale
+        return _tree_map(host_reduce, grads)
+
+    if scenario is Scenario.S2_IN_NET:
+        def in_net(g):
+            for a in axes:
+                g = coll.ring_all_reduce(g, a)
+            return g * scale
+        return _tree_map(in_net, grads)
+
+    if scenario is Scenario.S3_IN_NET_MAP:
+        def in_net_mapped(g):
+            for a in axes:
+                g = coll.ring_all_reduce(
+                    g, a, wire_map=coll.bf16_wire, unmap=coll.fp32_unwire
+                )
+            return g * scale
+        return _tree_map(in_net_mapped, grads)
+
+    if scenario is Scenario.HIERARCHICAL:
+        if not pod_axis:
+            # degenerates to S2 on a single pod
+            return _tree_map(lambda g: coll.ring_all_reduce(g, data_axis) * scale, grads)
+        return _tree_map(
+            lambda g: coll.hierarchical_all_reduce(g, data_axis, pod_axis) * scale, grads
+        )
+
+    raise ValueError(scenario)  # pragma: no cover
+
+
+def wire_bytes_per_device(nbytes: float, world: int, scenario: Scenario | str) -> float:
+    """Analytic wire cost (per device) of aggregating ``nbytes`` — feeds the
+    scenario benchmark and the §Roofline collective term cross-check."""
+    scenario = Scenario(scenario)
+    if world <= 1:
+        return 0.0
+    if scenario is Scenario.S1_HOST:
+        return nbytes * (world - 1)  # receive everyone else's full tensor
+    if scenario in (Scenario.S2_IN_NET, Scenario.NATIVE, Scenario.HIERARCHICAL):
+        return 2.0 * nbytes * (world - 1) / world
+    if scenario is Scenario.S3_IN_NET_MAP:
+        return 1.0 * nbytes * (world - 1) / world  # bf16 wire halves bytes
+    raise ValueError(scenario)

@@ -1,0 +1,80 @@
+"""Word-Count on a device mesh (§2, Fig 1) — the paper's running example.
+
+Map: each device ("server"/"mapper") histograms its local word list.
+Shuffle: counts are hash-routed to reducers — on TPU the mapper→reducer
+routing is one ``all_to_all`` over the device axis (bucket = word bucket).
+Reduce: each device ("reducer") sums the partial counts it received —
+performed as part of the shuffle's arrival processing, i.e. in transit.
+
+Word ids are dense ints in [0, vocab); bucket(word) = word // (vocab/p)
+(an order-preserving "hash" — tests also exercise a multiplicative hash
+via the permutation argument). The Pallas ``segment_reduce`` kernel is the
+production mapper histogram; ``jnp.bincount``-style scatter-add is the
+fallback/oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def local_histogram(words: jax.Array, vocab: int) -> jax.Array:
+    """Map: count words in this device's shard. (n,) int32 -> (vocab,) int32.
+
+    -1 entries are padding and are not counted.
+    """
+    valid = (words >= 0).astype(jnp.int32)
+    return jnp.zeros((vocab,), jnp.int32).at[jnp.clip(words, 0, vocab - 1)].add(valid)
+
+
+def wordcount_step(
+    words: jax.Array,
+    vocab: int,
+    axis_name: str = "all",
+    *,
+    histogram_fn: Callable[[jax.Array, int], jax.Array] | None = None,
+) -> jax.Array:
+    """SPMD word-count: returns this reducer's (vocab/p,) counts.
+
+    Runs inside shard_map over ``axis_name``. Device k ends up owning the
+    final counts of words [k·vocab/p, (k+1)·vocab/p) — data has been
+    reduced *while being shuffled* (single all_to_all + local add), the
+    S2/S3 path of the paper. Requires vocab % p == 0 (pad upstream).
+    """
+    p = lax.axis_size(axis_name)
+    if vocab % p:
+        raise ValueError(f"vocab {vocab} not divisible by world {p}")
+    hist = (histogram_fn or local_histogram)(words, vocab)  # map
+    buckets = hist.reshape(p, vocab // p)  # keyby: bucket = word // (vocab/p)
+    arrived = lax.all_to_all(buckets, axis_name, split_axis=0, concat_axis=0, tiled=False)
+    return arrived.sum(axis=0)  # reduce at arrival
+
+
+def wordcount_host_baseline(
+    words: jax.Array,
+    vocab: int,
+    axis_name: str = "all",
+) -> jax.Array:
+    """Scenario-1 baseline: ship ALL raw histograms to every endpoint
+    (all_gather) and reduce locally — endpoint compute, p× the wire bytes."""
+    hist = local_histogram(words, vocab)
+    gathered = lax.all_gather(hist, axis_name, tiled=False)  # (p, vocab)
+    full = gathered.sum(axis=0)
+    p = lax.axis_size(axis_name)
+    k = lax.axis_index(axis_name)
+    return lax.dynamic_slice_in_dim(full, k * (vocab // p), vocab // p)
+
+
+def wordcount_reference(word_shards: list[np.ndarray], vocab: int) -> np.ndarray:
+    """Oracle: plain counting over all shards. (vocab,)"""
+    out = np.zeros((vocab,), np.int64)
+    for ws in word_shards:
+        ws = np.asarray(ws)
+        ws = ws[ws >= 0]
+        np.add.at(out, ws, 1)
+    return out

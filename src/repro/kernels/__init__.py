@@ -1,0 +1,14 @@
+"""Pallas TPU kernels (validated against ref.py oracles in interpret mode).
+
+segment_reduce   — the p4mr REDUCER (one-hot matmul on the MXU)
+hash_partition   — the p4mr MAPPER (routing-id hash + histogram)
+ring_fused_step  — Scenario-3 fused in-transit hop (compress+accumulate)
+flash_attention  — LM hot-spot: online-softmax block attention in VMEM
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    flash_attention,
+    hash_partition,
+    ring_fused_step,
+    segment_reduce,
+)

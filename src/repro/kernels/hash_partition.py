@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: hash partition — the p4mr switch MAPPER.
+
+Computes each token's reducer bucket (multiplicative hash, the paper's
+"routing id") and the per-bucket histogram in one pass. The histogram is
+the capacity signal the shuffle (all_to_all) uses for send-buffer sizing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import HASH_MULT
+
+
+def _kernel(tok_ref, ids_ref, hist_ref, *, num_buckets: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    toks = tok_ref[...]
+    h = (toks.astype(jnp.uint32) * jnp.uint32(HASH_MULT)) >> jnp.uint32(16)
+    b = (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+    valid = toks >= 0
+    ids_ref[...] = jnp.where(valid, b, -1)
+    onehot = (b[:, None] == jnp.arange(num_buckets)[None, :]) & valid[:, None]
+    hist_ref[...] += onehot.astype(jnp.int32).sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "block_n", "interpret"))
+def hash_partition(
+    tokens: jax.Array,
+    num_buckets: int,
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """tokens (n,) int32 → (bucket_ids (n,) int32, histogram (num_buckets,))."""
+    n = tokens.shape[0]
+    pad = (-n) % block_n
+    padded = jnp.pad(tokens, (0, pad), constant_values=-1) if pad else tokens
+    grid = (padded.shape[0] // block_n,)
+    ids, hist = pl.pallas_call(
+        functools.partial(_kernel, num_buckets=num_buckets),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((num_buckets,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(padded)
+    return ids[:n], hist

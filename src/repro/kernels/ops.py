@@ -1,0 +1,38 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (the kernels target TPU; the
+interpreter executes the same kernel body for validation) and False when a
+TPU backend is present.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.hash_partition import hash_partition as _hashp
+from repro.kernels.ring_fused_step import ring_fused_step as _ring
+from repro.kernels.segment_reduce import segment_reduce as _segred
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def segment_reduce(values, seg_ids, num_segments, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _segred(values, seg_ids, num_segments, **kw)
+
+
+def hash_partition(tokens, num_buckets, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _hashp(tokens, num_buckets, **kw)
+
+
+def ring_fused_step(acc, wire, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _ring(acc, wire, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _flash(q, k, v, **kw)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+HASH_MULT = 0x9E3779B1  # Knuth multiplicative hash constant
+
+
+def segment_reduce(values: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    """values (n, d), seg_ids (n,) int32 in [-1, num_segments) — -1 dropped.
+    Returns (num_segments, d) fp32 sums. The word-count reducer."""
+    ok = seg_ids >= 0
+    safe = jnp.clip(seg_ids, 0, num_segments - 1)
+    out = jnp.zeros((num_segments, values.shape[1]), jnp.float32)
+    return out.at[safe].add(values.astype(jnp.float32) * ok[:, None])
+
+
+def hash_partition(tokens: jax.Array, num_buckets: int) -> tuple[jax.Array, jax.Array]:
+    """tokens (n,) int32 → (bucket_ids (n,), histogram (num_buckets,)).
+    Multiplicative hash then modulo — the word-count mapper."""
+    h = (tokens.astype(jnp.uint32) * jnp.uint32(HASH_MULT)) >> jnp.uint32(16)
+    b = (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+    hist = jnp.zeros((num_buckets,), jnp.int32).at[b].add(jnp.where(tokens >= 0, 1, 0))
+    b = jnp.where(tokens >= 0, b, -1)
+    return b, hist
+
+
+def ring_fused_step(acc: jax.Array, wire: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """The S3 in-transit hop: upcast the bf16 wire payload, accumulate in
+    fp32, emit the re-compressed bf16 payload for the next hop.
+    acc (n,) fp32, wire (n,) bf16 → (new_acc fp32, new_wire bf16)."""
+    new_acc = acc + wire.astype(jnp.float32)
+    return new_acc, new_acc.astype(jnp.bfloat16)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q (b, h, sq, d), k/v (b, h, sk, d) → (b, h, sq, d). fp32 math."""
+    import math
+
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.arange(sk)[None, :] <= (jnp.arange(sq)[:, None] + (sk - sq))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused in-transit hop — Scenario 3's map+reduce.
+
+One ring hop of the S3 aggregation: upcast the incoming bf16 wire payload,
+accumulate into the fp32 partial, and emit the re-compressed bf16 payload
+for the next hop — the switch applies the *map* (compression) and the
+*reduce* (accumulate) to the packet as it passes through. Fusing the three
+elementwise ops avoids two extra HBM round-trips per hop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(acc_ref, wire_ref, out_acc_ref, out_wire_ref):
+    acc = acc_ref[...].astype(jnp.float32)
+    up = wire_ref[...].astype(jnp.float32)
+    new = acc + up
+    out_acc_ref[...] = new
+    out_wire_ref[...] = new.astype(jnp.bfloat16)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ring_fused_step(
+    acc: jax.Array,
+    wire: jax.Array,
+    *,
+    block: int = 16384,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """acc (n,) fp32, wire (n,) bf16 → (new_acc fp32, new_wire bf16)."""
+    n = acc.shape[0]
+    pad = (-n) % block
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+        wire = jnp.pad(wire, (0, pad))
+    grid = (acc.shape[0] // block,)
+    new_acc, new_wire = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((acc.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((acc.shape[0],), jnp.bfloat16),
+        ],
+        interpret=interpret,
+    )(acc, wire)
+    return new_acc[:n], new_wire[:n]

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: segment reduce — the p4mr switch REDUCER.
+
+Accumulates rows of ``values`` into ``num_segments`` stateful buckets
+(word counts, MoE combine, reducer labels). TPU-native formulation: the
+scatter-add becomes a one-hot × values matmul per tile, which runs on the
+MXU — a programmable switch with a systolic array reduces at line rate.
+
+Grid: one program per row-tile. The output block (num_segments, d) is
+revisited by every step (constant index_map) and accumulated in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, ids_ref, out_ref, *, num_segments: int, bn: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...].astype(jnp.float32)  # (bn, d)
+    ids = ids_ref[...]  # (bn,)
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    onehot = (safe[:, None] == jnp.arange(num_segments)[None, :]) & valid[:, None]
+    # (nseg, bn) @ (bn, d) on the MXU
+    out_ref[...] += jnp.dot(
+        onehot.astype(jnp.float32).T, vals, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_n", "interpret"))
+def segment_reduce(
+    values: jax.Array,
+    seg_ids: jax.Array,
+    num_segments: int,
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """values (n, d) any float dtype, seg_ids (n,) int32 (-1 = drop).
+    Returns (num_segments, d) fp32. n padded to block_n internally."""
+    n, d = values.shape
+    pad = (-n) % block_n
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, pad), constant_values=-1)
+    grid = (values.shape[0] // block_n,)
+    return pl.pallas_call(
+        functools.partial(_kernel, num_segments=num_segments, bn=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
+        interpret=interpret,
+    )(values, seg_ids)

@@ -1,0 +1,120 @@
+"""Assigned input shapes × per-arch applicability + input_specs builders.
+
+``input_specs(cfg, shape_name, env)`` returns (tree of ShapeDtypeStruct,
+tree of PartitionSpec) for the step the shape lowers:
+  train_4k    → train_step   (tokens+labels)
+  prefill_32k → prefill_step (prompt)
+  decode_32k  → serve_step   (1 new token, KV cache at seq_len)
+  long_500k   → serve_step   (sub-quadratic archs only)
+
+Batched tensors use the device-major layout (see models/model.py): leading
+dims = mesh axes; the model dim is >1 only when the batch splits across
+rep groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.parallel import ShardEnv
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# microbatch counts for train_4k (memory: activations/device under scan+remat)
+TRAIN_MICROBATCHES = {
+    "grok-1-314b": 16,
+    "phi3-medium-14b": 8,
+    "qwen2-vl-7b": 8,
+    "granite-8b": 8,
+    "minicpm3-4b": 4,
+    "recurrentgemma-2b": 4,
+    "mamba2-1.3b": 2,
+    "seamless-m4t-large-v2": 2,
+    "granite-moe-1b-a400m": 2,
+    "qwen1.5-0.5b": 1,
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped). long_500k needs sub-quadratic mixing."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "O(L^2) full attention at 524k ctx — skipped per assignment"
+    return True, ""
+
+
+def batch_layout(env: ShardEnv, global_batch: int) -> tuple[tuple[int, ...], P, int]:
+    """Leading mesh dims + PartitionSpec prefix + local batch."""
+    b_loc = env.local_batch(global_batch)
+    md = env.model_size if env.batch_split_rep(global_batch) else 1
+    if env.pod_axis:
+        dims = (env.pod_size, env.data_size, md)
+        spec = ("pod", "data", "model" if md > 1 else None)
+    else:
+        dims = (env.data_size, md)
+        spec = ("data", "model" if md > 1 else None)
+    return dims, spec, b_loc
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, env: ShardEnv, seq: int, global_batch: int):
+    dims, spec, b_loc = batch_layout(env, global_batch)
+    toks = _sds(dims + (b_loc, seq), jnp.int32)
+    pp = P(*spec)
+    batch = {"labels": toks}
+    specs = {"labels": pp}
+    if cfg.enc_layers:
+        s_enc = s_dec = seq // 2
+        batch["tokens"] = _sds(dims + (b_loc, s_dec), jnp.int32)
+        batch["labels"] = _sds(dims + (b_loc, s_dec), jnp.int32)
+        batch["enc_embeds"] = _sds(dims + (b_loc, s_enc, cfg.d_model), jnp.bfloat16)
+        batch["enc_positions"] = _sds(dims + (b_loc, s_enc), jnp.int32)
+        specs.update({k: pp for k in batch})
+        return batch, specs
+    if cfg.embed_input:
+        batch["embeds"] = _sds(dims + (b_loc, seq, cfg.d_model), jnp.bfloat16)
+        if cfg.mrope_sections is not None:
+            batch["positions"] = _sds(dims + (b_loc, seq, 3), jnp.int32)
+    else:
+        batch["tokens"] = _sds(dims + (b_loc, seq), jnp.int32)
+    specs.update({k: pp for k in batch})
+    return batch, specs
+
+
+def prefill_input_specs(cfg: ModelConfig, env: ShardEnv, seq: int, global_batch: int):
+    # prefill consumes the same tensors as train minus labels
+    batch, specs = train_input_specs(cfg, env, seq, global_batch)
+    batch.pop("labels")
+    specs.pop("labels")
+    return batch, specs
+
+
+def decode_input_specs(cfg: ModelConfig, env: ShardEnv, global_batch: int):
+    dims, spec, b_loc = batch_layout(env, global_batch)
+    batch = {
+        "tokens": _sds(dims + (b_loc,), jnp.int32),
+        "cache_len": _sds((), jnp.int32),
+    }
+    specs = {"tokens": P(*spec), "cache_len": P()}
+    return batch, specs

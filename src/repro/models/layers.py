@@ -1,0 +1,120 @@
+"""Shared neural layers (TP-aware where they touch sharded dims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import LeafSpec, ModelConfig
+from repro.models.parallel import ShardEnv, col_parallel, fetch_weight, row_parallel
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    """RMSNorm in fp32, scale gathered upstream. x (…, d), scale (d,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+def rope_angles(positions, dim: int, theta: float):
+    """positions (…,) → cos/sin (…, dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (…, s, h, d) rotate-half convention; cos/sin (…, s, d/2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def mrope_angles(positions, dim: int, theta: float, sections: tuple[int, ...]):
+    """M-RoPE: positions (…, s, 3) [t,h,w grids]; sections sum to dim/2.
+
+    Each frequency band takes its angle from the corresponding grid — the
+    qwen2-vl multimodal rotary embedding.
+    """
+    assert sum(sections) == dim // 2, (sections, dim)
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    cos_parts, sin_parts = [], []
+    off = 0
+    for i, sec in enumerate(sections):
+        ang = positions[..., i].astype(jnp.float32)[..., None] * inv[off:off + sec]
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        off += sec
+    return jnp.concatenate(cos_parts, -1), jnp.concatenate(sin_parts, -1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU/GeGLU) — column→row parallel
+# ---------------------------------------------------------------------------
+def mlp_specs(cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": LeafSpec((d, ff), tp_dim=1, fsdp_dim=0),
+        "wi_up": LeafSpec((d, ff), tp_dim=1, fsdp_dim=0),
+        "wo": LeafSpec((ff, d), tp_dim=0, fsdp_dim=1),
+    }
+
+
+def mlp_apply(p, x, cfg: ModelConfig, env: ShardEnv):
+    act = act_fn(cfg.act)
+    if env.compute_at_data and env.fsdp_size > 1:
+        # serving: route activations to the resident weight shards
+        from repro.models.parallel import serve_col_matmul, serve_row_matmul
+
+        g = serve_col_matmul(x, p["wi_gate"], env)
+        u = serve_col_matmul(x, p["wi_up"], env)
+        return env.psum_tp(serve_row_matmul(act(g) * u, p["wo"], env))
+    g = col_parallel(x, p["wi_gate"], env)
+    u = col_parallel(x, p["wi_up"], env)
+    return row_parallel(act(g) * u, p["wo"], env)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (mamba2 / short conv), channels TP-sharded
+# ---------------------------------------------------------------------------
+def conv1d_specs(d_inner: int, width: int) -> LeafSpec:
+    return LeafSpec((d_inner, width), tp_dim=0, fsdp_dim=None, scale=0.1)
+
+
+def causal_conv1d(x, w, state=None):
+    """x (b, s, c_local), w (c_local, width) depthwise causal conv.
+
+    ``state`` (b, width-1, c_local) holds trailing inputs for decode.
+    Returns (y, new_state).
+    """
+    b, s, c = x.shape
+    width = w.shape[1]
+    if state is None:
+        state = jnp.zeros((b, width - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (b, s+width-1, c)
+    # y[t] = sum_k w[:,k] * xp[t+k]
+    y = jnp.zeros((b, s, c), jnp.float32)
+    for k in range(width):
+        y = y + xp[:, k:k + s, :].astype(jnp.float32) * w[:, k].astype(jnp.float32)
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return jax.nn.silu(y).astype(x.dtype), new_state

@@ -1,0 +1,193 @@
+"""Mixture-of-Experts with word-count-style dispatch (the paper's shuffle).
+
+Token→expert routing **is** the paper's map→shuffle→reduce: the router is
+the mapper's hash, the ``all_to_all`` is the mapper→reducer forwarding, and
+the gate-weighted combine is the in-transit reduce. Two dispatch modes:
+
+* ``a2a``        — sequence-sharded: each tp rank takes its slice of the
+                   sequence, routes its tokens through one all_to_all to the
+                   expert-owning ranks, computes, routes back, and the tp
+                   group all-gathers the combined sequence. Paper-faithful
+                   and compute-balanced; used for train/prefill.
+* ``replicated`` — tokens replicated across the tp group; each rank applies
+                   only its local experts (masked) and the outputs psum over
+                   the tp group. Used for decode (s < tp) and as fallback.
+
+Expert storage: dim0 = model_size*e_loc "slots"; when n_experts < tp each
+expert is replicated tp/n_experts times (``dup_of`` sync), and senders pick
+the replica by token index for balance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import LeafSpec, ModelConfig
+from repro.models.layers import act_fn
+from repro.models.parallel import ShardEnv, fetch_weight
+
+
+def moe_specs(cfg: ModelConfig, env: ShardEnv) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    e_loc = max(1, m.n_experts // env.tp)
+    slots = env.model_size * e_loc
+    dup = m.n_experts
+    return {
+        "router": LeafSpec((d, m.n_experts), tp_dim=None, fsdp_dim=0),
+        "wi_gate": LeafSpec((slots, d, m.d_expert), tp_dim=0, fsdp_dim=1, dup_of=dup),
+        "wi_up": LeafSpec((slots, d, m.d_expert), tp_dim=0, fsdp_dim=1, dup_of=dup),
+        "wo": LeafSpec((slots, m.d_expert, d), tp_dim=0, fsdp_dim=2, dup_of=dup),
+    }
+
+
+def _router(p, x, cfg: ModelConfig, env: ShardEnv):
+    """x (n, d) → (gates (n,k), experts (n,k) int32, aux_loss scalar)."""
+    m = cfg.moe
+    w = fetch_weight(p["router"], env, tp_dim=None, fsdp_dim=0)
+    logits = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance auxiliary
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((m.n_experts,)).at[experts.reshape(-1)].add(1.0) / max(1, experts.size)
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+    return gates.astype(x.dtype), experts, aux
+
+
+def _expert_ffn(p, x, e_slot, cfg: ModelConfig, env: ShardEnv):
+    """Apply local expert slot ``e_slot`` (static int) to x (n, d)."""
+    act = act_fn(cfg.act)
+    if env.compute_at_data and env.fsdp_size > 1:
+        # serving: expert weights stay sharded across (pod, data); the few
+        # decode tokens travel to them instead (see serve_*_matmul)
+        from repro.models.parallel import serve_col_matmul, serve_row_matmul
+
+        x3 = x[:, None, :]  # (n, 1, d): token dim rides the a2a batch axis
+        g = serve_col_matmul(x3, p["wi_gate"][e_slot], env, rep=False)
+        u = serve_col_matmul(x3, p["wi_up"][e_slot], env, rep=False)
+        return serve_row_matmul(act(g) * u, p["wo"][e_slot], env, rep=False)[:, 0, :]
+    wg = fetch_weight(p["wi_gate"], env, tp_dim=0, fsdp_dim=1, rep_gather=False)[e_slot]
+    wu = fetch_weight(p["wi_up"], env, tp_dim=0, fsdp_dim=1, rep_gather=False)[e_slot]
+    wo = fetch_weight(p["wo"], env, tp_dim=0, fsdp_dim=2, rep_gather=False)[e_slot]
+    h = act(x @ wg.astype(x.dtype)) * (x @ wu.astype(x.dtype))
+    return h @ wo.astype(x.dtype)
+
+
+def moe_apply_replicated(p, x, cfg: ModelConfig, env: ShardEnv):
+    """Tokens replicated across tp; rank applies its local experts only."""
+    m = cfg.moe
+    b, s, d = x.shape
+    flat = x.reshape(-1, d)
+    gates, experts, aux = _router(p, flat, cfg, env)
+    e_loc = max(1, m.n_experts // env.tp)
+    span = max(1, env.tp // m.n_experts)
+    t = env.tp_rank()
+    out = jnp.zeros_like(flat)
+    for i in range(e_loc):
+        # global expert id of my i-th slot (traced via t)
+        if m.n_experts % env.tp == 0:
+            e_id = t * e_loc + i
+        else:
+            e_id = t // span
+        hit = experts == e_id
+        w = jnp.sum(jnp.where(hit, gates.astype(jnp.float32), 0.0), axis=-1)  # (n,)
+        if span > 1:
+            # replica balance: replica (t % span) serves tokens with
+            # index % span == t % span
+            mine = (jnp.arange(flat.shape[0]) % span) == (t % span)
+            w = w * mine.astype(w.dtype)
+        y = _expert_ffn(p, flat, i, cfg, env)
+        out = out + y * w[:, None].astype(y.dtype)
+    out = env.psum_tp(out)
+    return out.reshape(b, s, d), aux
+
+
+def moe_apply_a2a(p, x, cfg: ModelConfig, env: ShardEnv):
+    """Sequence-sharded all_to_all dispatch (the word-count shuffle)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    tp = env.tp
+    if s % tp or tp == 1:
+        return moe_apply_replicated(p, x, cfg, env)
+    s_loc = s // tp
+    t = env.tp_rank()
+    # my sequence slice (b, s_loc, d) -> tokens (n, d)
+    xs = jnp.moveaxis(x.reshape(b, tp, s_loc, d), 1, 0)
+    mine = lax.dynamic_index_in_dim(xs, t, 0, keepdims=False)
+    tok = mine.reshape(-1, d)
+    n = tok.shape[0]
+    gates, experts, aux = _router(p, tok, cfg, env)
+
+    e_loc = max(1, m.n_experts // tp)
+    span = max(1, tp // m.n_experts)
+    k = m.top_k
+    cap = int(-(-n * k * m.capacity_factor // tp))  # per-destination-rank capacity
+
+    # flatten assignments
+    tok_id = jnp.repeat(jnp.arange(n), k)  # (n*k,)
+    e_id = experts.reshape(-1)
+    g_val = gates.reshape(-1)
+    if m.n_experts % tp == 0:
+        dst = e_id // e_loc
+        e_slot = e_id % e_loc
+    else:
+        dst = e_id * span + (tok_id % span)  # replica by token parity
+        e_slot = jnp.zeros_like(e_id)
+
+    # position within destination: stable sort by dst, rank within run
+    order = jnp.argsort(dst, stable=True)
+    dst_sorted = dst[order]
+    pos_sorted = jnp.arange(n * k) - jnp.searchsorted(dst_sorted, dst_sorted, side="left")
+    pos = jnp.zeros((n * k,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < cap
+    slot = jnp.where(keep, dst * cap + pos, tp * cap)  # overflow -> dropped
+
+    send_x = jnp.zeros((tp * cap + 1, d), x.dtype).at[slot].add(tok[tok_id])[:-1]
+    send_meta = jnp.zeros((tp * cap + 1, 2), jnp.int32).at[slot].add(
+        jnp.stack([e_slot + 1, tok_id], -1))[:-1]  # e_slot+1: 0 == empty
+
+    # the shuffle: mapper -> reducer (word-count's hash routing)
+    recv_x = lax.all_to_all(
+        send_x.reshape(tp, cap, d), env.model_axis, split_axis=0, concat_axis=0,
+        axis_index_groups=env.tp_groups, tiled=False,
+    ).reshape(tp * cap, d)
+    recv_meta = lax.all_to_all(
+        send_meta.reshape(tp, cap, 2), env.model_axis, split_axis=0, concat_axis=0,
+        axis_index_groups=env.tp_groups, tiled=False,
+    ).reshape(tp * cap, 2)
+
+    valid = recv_meta[:, 0] > 0
+    y = jnp.zeros_like(recv_x)
+    for i in range(e_loc):
+        sel = valid & (recv_meta[:, 0] - 1 == i)
+        yi = _expert_ffn(p, recv_x * sel[:, None].astype(recv_x.dtype), i, cfg, env)
+        y = y + yi * sel[:, None].astype(yi.dtype)
+
+    # route results back to source ranks
+    back = lax.all_to_all(
+        y.reshape(tp, cap, d), env.model_axis, split_axis=0, concat_axis=0,
+        axis_index_groups=env.tp_groups, tiled=False,
+    ).reshape(tp * cap, d)
+
+    # combine: gate-weighted sum at the original token position
+    out = jnp.zeros((n, d), x.dtype)
+    contrib = back[jnp.where(keep, slot, tp * cap - 1)] * (keep * g_val)[:, None].astype(back.dtype)
+    out = out.at[tok_id].add(contrib)
+
+    # tp group all-gather restores the full sequence
+    full = lax.all_gather(
+        out.reshape(b, s_loc, d), env.model_axis,
+        axis_index_groups=env.tp_groups, axis=1, tiled=True,
+    )
+    return full.reshape(b, s, d), aux
+
+
+def moe_apply(p, x, cfg: ModelConfig, env: ShardEnv, *, decode: bool = False):
+    if decode or cfg.moe.dispatch == "replicated":
+        return moe_apply_replicated(p, x, cfg, env)
+    return moe_apply_a2a(p, x, cfg, env)

@@ -1,0 +1,373 @@
+"""Sharding environment: TP/FSDP/rep-group machinery under shard_map.
+
+Layout contract (see DESIGN.md §4):
+
+* Mesh axes: ``('pod','data','model')`` (multi-pod) or ``('data','model')``.
+* Every 2-D weight has a **TP dim** (stays sharded during compute) and an
+  **FSDP dim** (fully gathered at use). Storage shards the TP dim over the
+  whole ``model`` axis (16) and the FSDP dim over ``(pod, data)``.
+* Compute uses ``tp ≤ model_size`` ranks (arch-dependent head divisibility);
+  the leftover factor ``rep = model_size / tp`` holds *replica groups*:
+  weights are gathered across rep-groups at use (ZeRO-style) and the rep
+  factor is used as extra data parallelism when the batch divides.
+* Model-axis index m ↦ (tp_rank t, rep_rank r) with ``t = m // rep``,
+  ``r = m % rep`` — rep-groups are contiguous so gathered storage pieces
+  concatenate into contiguous working slices.
+
+The paper's scenarios plug in here: ``scenario_all_gather`` is the FSDP /
+rep-group weight fetch whose **backward pass is the gradient aggregation**
+— endpoint (S1), in-transit ring (S2), in-transit ring with on-the-wire
+compression (S3), or XLA-native (beyond paper). Selecting a scenario
+selects how gradients are reduced across the data-parallel world.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+from repro.core.scenarios import Scenario
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardEnv:
+    """Static sharding context threaded through every model function."""
+
+    model_size: int  # size of the 'model' mesh axis
+    data_size: int
+    pod_size: int = 1
+    tp: int = 1  # tensor-parallel degree (divides model_size)
+    scenario: Scenario = Scenario.NATIVE
+    model_axis: str = "model"
+    data_axis: str = "data"
+    pod_axis: str | None = None  # None on single-pod meshes
+    # Serving mode: instead of all-gathering FSDP-sharded weights to the
+    # tokens (fine for training where activations ≫ weights), route the few
+    # decode activations TO the weight shards and reduce partials in
+    # transit — the paper's "compute where the data already is". Cuts the
+    # decode collective term by ~params/activations (see §Perf H2).
+    compute_at_data: bool = False
+
+    def __post_init__(self):
+        if self.model_size % self.tp:
+            raise ValueError(f"tp={self.tp} must divide model axis {self.model_size}")
+
+    # ---------------------------------------------------------- derived --
+    @property
+    def rep(self) -> int:
+        return self.model_size // self.tp
+
+    @property
+    def fsdp_axes(self) -> tuple[str, ...]:
+        return (self.pod_axis, self.data_axis) if self.pod_axis else (self.data_axis,)
+
+    @property
+    def fsdp_size(self) -> int:
+        return self.pod_size * self.data_size
+
+    @property
+    def dp_world(self) -> int:
+        """Total gradient-averaging world (pod × data × rep)."""
+        return self.fsdp_size * self.rep
+
+    @property
+    def tp_groups(self) -> list[list[int]] | None:
+        """Groups of model-axis indices forming each TP domain (fixed r)."""
+        if self.tp == self.model_size:
+            return None  # whole axis; let collectives use the plain axis
+        return [[t * self.rep + r for t in range(self.tp)] for r in range(self.rep)]
+
+    @property
+    def rep_groups(self) -> list[list[int]] | None:
+        """Replica groups (fixed t, contiguous) — the ZeRO gather domain."""
+        if self.rep == 1:
+            return None
+        return [[t * self.rep + r for r in range(self.rep)] for t in range(self.tp)]
+
+    def dup_sync_groups(self, n_logical: int) -> list[list[int]] | None:
+        """Model-axis groups holding identical copies of a parameter that is
+        logically split into ``n_logical`` entities (kv heads, experts).
+
+        Copies arise from (a) rep replicas and (b) tp > n_logical spans.
+        Their gradients must be psum'ed to keep copies in sync. Returns
+        None when no duplication exists (n_logical % tp == 0 and rep == 1).
+        """
+        if n_logical <= 0:
+            return None
+        if n_logical % self.tp == 0:
+            return self.rep_groups  # None when rep == 1
+        if self.tp % n_logical:
+            raise ValueError(f"n_logical={n_logical} incompatible with tp={self.tp}")
+        span = self.tp // n_logical
+        groups = []
+        for h in range(n_logical):
+            groups.append(
+                [(h * span + i) * self.rep + r for i in range(span) for r in range(self.rep)]
+            )
+        return groups
+
+    def dup_map(self, n_logical: int) -> tuple[int, ...]:
+        """For a storage dim of size model_size*per_rank sharding ``n_logical``
+        entities: the logical entity stored in each slot (init layout)."""
+        per_rank = max(1, n_logical // self.tp)
+        out = []
+        for j in range(self.model_size * per_rank):
+            m, i = divmod(j, per_rank)
+            t = m // self.rep
+            if n_logical % self.tp == 0:
+                out.append(t * per_rank + i)
+            else:
+                out.append(t // (self.tp // n_logical))
+        return tuple(out)
+
+    # ------------------------------------------------------- rank lookup --
+    def tp_rank(self):
+        return lax.axis_index(self.model_axis) // self.rep
+
+    def rep_rank(self):
+        return lax.axis_index(self.model_axis) % self.rep
+
+    # ------------------------------------------------ collective helpers --
+    def psum_tp(self, x):
+        """Sum across the TP domain (row-parallel matmul combine)."""
+        return lax.psum(x, self.model_axis, axis_index_groups=self.tp_groups)
+
+    def pmax_tp(self, x):
+        return lax.pmax(x, self.model_axis, axis_index_groups=self.tp_groups)
+
+    def batch_split_rep(self, global_batch: int) -> bool:
+        """Does the batch additionally split across rep groups?"""
+        return self.rep > 1 and global_batch % (self.fsdp_size * self.rep) == 0
+
+    def local_batch(self, global_batch: int) -> int:
+        dp = self.fsdp_size * (self.rep if self.batch_split_rep(global_batch) else 1)
+        if global_batch % self.fsdp_size:
+            if global_batch >= self.fsdp_size:
+                raise ValueError(f"batch {global_batch} not divisible by dp {self.fsdp_size}")
+            return 1  # tiny batches replicate (e.g. long_500k batch=1)
+        return max(1, global_batch // dp)
+
+    def loss_normalizer(self, global_batch: int, seq: int) -> float:
+        """1 / (sum over ALL devices of locally-counted tokens)."""
+        b_loc = self.local_batch(global_batch)
+        n_dev = self.fsdp_size * self.model_size
+        return 1.0 / (b_loc * seq * n_dev)
+
+
+# ---------------------------------------------------------------------------
+# Scenario-controlled FSDP / rep gather:  forward = all-gather of weights,
+# backward = the paper's S1/S2/S3 gradient aggregation (or native).
+# ---------------------------------------------------------------------------
+def _move_to_front(x, dim):
+    return jnp.moveaxis(x, dim, 0)
+
+
+def _ring_reduce_scatter_dim(g, axis_names, dim, groups, wire=False):
+    """Reduce-scatter ``g`` along ``dim`` over (possibly several) axes."""
+    wire_map = coll.bf16_wire if wire else None
+    unmap = coll.fp32_unwire if wire else None
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    for ax in axis_names:  # hierarchical: major axis first (pod, then data)
+        p = len(groups[0]) if groups is not None else lax.axis_size(ax)
+        gm = _move_to_front(g, dim)
+        chunks = gm.reshape((p, gm.shape[0] // p) + gm.shape[1:])
+        red = coll.ring_reduce_scatter(chunks, ax, groups=groups, wire_map=wire_map, unmap=unmap)
+        g = jnp.moveaxis(red, 0, dim)
+    return g
+
+
+def _endpoint_reduce_scatter_dim(g, axis_names, dim, groups):
+    """S1: gather every peer's full gradient, reduce locally, slice mine."""
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    for ax in axis_names:
+        gathered = lax.all_gather(g, ax, axis_index_groups=groups, tiled=False)
+        g = gathered.sum(axis=0)  # endpoint compute
+        p = gathered.shape[0]
+        if groups is None:
+            rank = lax.axis_index(ax)
+        else:
+            rank = coll._group_rank(ax, groups)
+        gm = _move_to_front(g, dim)
+        chunk = gm.shape[0] // p
+        gm = lax.dynamic_slice_in_dim(gm, rank * chunk, chunk, axis=0)
+        g = jnp.moveaxis(gm, 0, dim)
+    return g
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def scenario_all_gather(x, axis_names, dim, groups_key, env: ShardEnv):
+    """All-gather ``x`` along ``dim`` over ``axis_names``; backward follows
+    ``env.scenario``. ``groups_key``: None (full axes) or 'rep' (rep-groups
+    of the model axis)."""
+    groups = env.rep_groups if groups_key == "rep" else None
+    return lax.all_gather(x, axis_names, axis=dim, tiled=True, axis_index_groups=groups)
+
+
+def _sag_fwd(x, axis_names, dim, groups_key, env):
+    return scenario_all_gather(x, axis_names, dim, groups_key, env), None
+
+
+def _sag_bwd(axis_names, dim, groups_key, env, _, g):
+    groups = env.rep_groups if groups_key == "rep" else None
+    sc = env.scenario
+    if sc is Scenario.NATIVE:
+        out = lax.psum_scatter(g, axis_names, scatter_dimension=dim, tiled=True,
+                               axis_index_groups=groups)
+    elif sc in (Scenario.S2_IN_NET, Scenario.HIERARCHICAL):
+        out = _ring_reduce_scatter_dim(g, axis_names, dim, groups, wire=False)
+    elif sc is Scenario.S3_IN_NET_MAP:
+        out = _ring_reduce_scatter_dim(g, axis_names, dim, groups, wire=True)
+    elif sc is Scenario.S1_HOST:
+        out = _endpoint_reduce_scatter_dim(g, axis_names, dim, groups)
+    else:  # pragma: no cover
+        raise ValueError(sc)
+    return (out,)
+
+
+scenario_all_gather.defvjp(_sag_fwd, _sag_bwd)
+
+
+def fetch_weight(w, env: ShardEnv, *, tp_dim: int, fsdp_dim: int | None,
+                 rep_gather: bool = True):
+    """Storage shard → working slice.
+
+    1. gather FSDP dim over (pod, data)   [full input dim]
+    2. gather TP dim over rep groups      [X/16 → X/tp]
+
+    Backward = scenario-selected reduce-scatter: gradients leave already
+    aggregated across the whole DP world and shaped like storage.
+
+    ``rep_gather=False`` for slot-layout leaves (kv heads / experts):
+    their model-axis shard IS the rank's working set (duplicate copies are
+    materialized in storage; dup_sync_groups handles their grad sync).
+    """
+    if fsdp_dim is not None and env.fsdp_size > 1:
+        w = scenario_all_gather(w, env.fsdp_axes, fsdp_dim, None, env)
+    if rep_gather and tp_dim is not None and env.rep > 1:
+        w = scenario_all_gather(w, env.model_axis, tp_dim, "rep", env)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Serving: compute-at-data matmuls (activations travel, weights stay put)
+# ---------------------------------------------------------------------------
+def serve_col_matmul(x, w, env: ShardEnv, compute_dtype=jnp.bfloat16, rep=True):
+    """x (b, s, d) @ w — w storage (d/fsdp, F/model); returns (b, s, F/tp).
+
+    Instead of gathering 15/16 of the weight, ship the (tiny) decode
+    activations: all_to_all splits x's feature dim across the fsdp axis
+    while concatenating batches, each rank multiplies by its resident
+    shard, and a reduce-scatter sums the partial contractions back per
+    batch — both collectives move activation-sized payloads only.
+    """
+    if rep and env.rep > 1:
+        w = scenario_all_gather(w, env.model_axis, 1, "rep", env)
+    w = w.astype(compute_dtype)
+    x = x.astype(compute_dtype)
+    if env.fsdp_size == 1:
+        return jnp.einsum("bsd,df->bsf", x, w)
+    xs = lax.all_to_all(x, env.fsdp_axes, split_axis=2, concat_axis=0, tiled=True)
+    part = jnp.einsum("bsd,df->bsf", xs, w)  # partial over my d-slice
+    return lax.psum_scatter(part, env.fsdp_axes, scatter_dimension=0, tiled=True)
+
+
+def serve_row_matmul(h, w, env: ShardEnv, compute_dtype=jnp.bfloat16, rep=True):
+    """h (b, s, F/tp) @ w — w storage (F/model, d/fsdp); returns (b, s, d),
+    still needing the caller's psum over the tp group (row-parallel)."""
+    if rep and env.rep > 1:
+        w = scenario_all_gather(w, env.model_axis, 0, "rep", env)
+    w = w.astype(compute_dtype)
+    h = h.astype(compute_dtype)
+    if env.fsdp_size == 1:
+        return jnp.einsum("bsf,fd->bsd", h, w)
+    hg = lax.all_gather(h, env.fsdp_axes, axis=0, tiled=True)  # (B, s, F/tp)
+    part = jnp.einsum("bsf,fd->bsd", hg, w)  # (B, s, d/fsdp)
+    return lax.all_to_all(part, env.fsdp_axes, split_axis=0, concat_axis=2, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# TP building blocks
+# ---------------------------------------------------------------------------
+def col_parallel(x, w, env: ShardEnv, *, fsdp_dim=0, compute_dtype=jnp.bfloat16):
+    """x @ w with the output dim TP-sharded. w storage: (d_in/fsdp, D_out/16)."""
+    wk = fetch_weight(w, env, tp_dim=1, fsdp_dim=fsdp_dim)
+    return jnp.einsum("...d,df->...f", x.astype(compute_dtype), wk.astype(compute_dtype))
+
+
+def row_parallel(x, w, env: ShardEnv, *, fsdp_dim=1, compute_dtype=jnp.bfloat16):
+    """x @ w with the input dim TP-sharded; psum combine over the TP group.
+    w storage: (D_in/16, d_out/fsdp)."""
+    wk = fetch_weight(w, env, tp_dim=0, fsdp_dim=fsdp_dim)
+    y = jnp.einsum("...f,fd->...d", x.astype(compute_dtype), wk.astype(compute_dtype))
+    return env.psum_tp(y)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded embedding + cross-entropy (padded vocab over model axis)
+# ---------------------------------------------------------------------------
+def pad_vocab(vocab: int, model_size: int) -> int:
+    return ((vocab + model_size - 1) // model_size) * model_size
+
+
+def embed_lookup(ids, table, env: ShardEnv, vocab_padded: int, compute_dtype=jnp.bfloat16):
+    """ids (…,) int32 → (…, d). table storage: (V_pad/16, d/fsdp)."""
+    tbl = fetch_weight(table, env, tp_dim=0, fsdp_dim=1)  # (V_pad/tp, d)
+    per = vocab_padded // env.tp
+    start = env.tp_rank() * per
+    loc = ids - start
+    ok = (loc >= 0) & (loc < per)
+    emb = jnp.take(tbl, jnp.clip(loc, 0, per - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, 0).astype(compute_dtype)
+    return env.psum_tp(emb)
+
+
+def sharded_logits(x, table, env: ShardEnv, compute_dtype=jnp.bfloat16):
+    """x (…, d) → logits (…, V_pad/tp), local vocab shard."""
+    tbl = fetch_weight(table, env, tp_dim=0, fsdp_dim=1)  # (V_pad/tp, d)
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype), tbl.astype(compute_dtype))
+
+
+def sharded_xent(x, table, labels, env: ShardEnv, vocab: int, vocab_padded: int):
+    """Cross-entropy with vocab sharded across the TP group.
+
+    Returns per-position nll (…,) in fp32. ``labels`` may contain -1 for
+    padding (masked to 0 loss).
+    """
+    logits = sharded_logits(x, table, env).astype(jnp.float32)
+    per = logits.shape[-1]
+    start = env.tp_rank() * per
+    # mask out vocab padding columns on the owning shard
+    col = start + jnp.arange(per)
+    logits = jnp.where(col < vocab, logits, -jnp.inf)
+    # stabilizer only — gradient-free (pmax has no transpose rule)
+    mx = env.pmax_tp(lax.stop_gradient(jnp.max(logits, axis=-1)))
+    se = env.psum_tp(jnp.sum(jnp.exp(logits - mx[..., None]), axis=-1))
+    lse = jnp.log(se) + mx
+    loc = labels - start
+    ok = (loc >= 0) & (loc < per)
+    tl = jnp.take_along_axis(logits, jnp.clip(loc, 0, per - 1)[..., None], axis=-1)[..., 0]
+    tl = env.psum_tp(jnp.where(ok, tl, 0.0))
+    nll = lse - tl
+    return jnp.where(labels >= 0, nll, 0.0)
+
+
+def argmax_logits(x, table, env: ShardEnv, vocab: int):
+    """Greedy next-token over the sharded vocab (decode path)."""
+    logits = sharded_logits(x, table, env).astype(jnp.float32)
+    per = logits.shape[-1]
+    start = env.tp_rank() * per
+    col = start + jnp.arange(per)
+    logits = jnp.where(col < vocab, logits, -jnp.inf)
+    loc_max = jnp.max(logits, axis=-1)
+    loc_arg = jnp.argmax(logits, axis=-1) + start
+    gmax = env.pmax_tp(loc_max)
+    # break ties toward the smallest index: invalidate non-max shards
+    cand = jnp.where(loc_max >= gmax, loc_arg, jnp.iinfo(jnp.int32).max)
+    return -env.pmax_tp(-cand)  # pmin over the tp group

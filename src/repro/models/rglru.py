@@ -1,0 +1,88 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin), TP over lru channels.
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t),
+a_t = exp(−c · softplus(Λ) · r_t),  r/i = σ(diag gates on x_t).
+
+Simplification vs Griffin (noted in DESIGN.md): the r/i gate projections
+are diagonal (per-channel) rather than block-diagonal — the recurrence
+structure, decay law and state shape are unchanged.
+
+Train/prefill uses ``lax.associative_scan`` over the sequence (log-depth,
+the TPU-friendly form); decode carries (b, lru_loc) state one step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import LeafSpec, ModelConfig
+from repro.models.layers import causal_conv1d, conv1d_specs
+from repro.models.parallel import ShardEnv, fetch_weight
+
+RG_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig, env: ShardEnv) -> dict:
+    d = cfg.d_model
+    lru = cfg.d_model  # RecurrentGemma: lru_width == d_model (2560)
+    return {
+        "w_gate": LeafSpec((d, lru), tp_dim=1, fsdp_dim=0),
+        "w_in": LeafSpec((d, lru), tp_dim=1, fsdp_dim=0),
+        "conv": conv1d_specs(lru, 4),
+        "lam": LeafSpec((lru,), tp_dim=0, fsdp_dim=None, init="ones"),
+        "gate_a_w": LeafSpec((lru,), tp_dim=0, fsdp_dim=None, scale=1.0),
+        "gate_a_b": LeafSpec((lru,), tp_dim=0, fsdp_dim=None, init="zeros"),
+        "gate_i_w": LeafSpec((lru,), tp_dim=0, fsdp_dim=None, scale=1.0),
+        "gate_i_b": LeafSpec((lru,), tp_dim=0, fsdp_dim=None, init="zeros"),
+        "w_out": LeafSpec((lru, d), tp_dim=0, fsdp_dim=1),
+    }
+
+
+def rglru_apply(p, x, cfg: ModelConfig, env: ShardEnv, *, state=None, want_state=False):
+    """x (b,s,d) → (b,s,d); state = {"conv": ..., "h": (b, lru_loc)}."""
+    b, s, d = x.shape
+    gate_branch = jnp.einsum(
+        "bsd,df->bsf", x, fetch_weight(p["w_gate"], env, tp_dim=1, fsdp_dim=0).astype(x.dtype))
+    xin = jnp.einsum(
+        "bsd,df->bsf", x, fetch_weight(p["w_in"], env, tp_dim=1, fsdp_dim=0).astype(x.dtype))
+
+    st = state or {}
+    conv_w = fetch_weight(p["conv"], env, tp_dim=0, fsdp_dim=None)
+    xin, conv_state = causal_conv1d(xin, conv_w, st.get("conv"))
+
+    lam = fetch_weight(p["lam"], env, tp_dim=0, fsdp_dim=None).astype(jnp.float32)
+    aw = fetch_weight(p["gate_a_w"], env, tp_dim=0, fsdp_dim=None).astype(jnp.float32)
+    ab = fetch_weight(p["gate_a_b"], env, tp_dim=0, fsdp_dim=None).astype(jnp.float32)
+    iw = fetch_weight(p["gate_i_w"], env, tp_dim=0, fsdp_dim=None).astype(jnp.float32)
+    ib = fetch_weight(p["gate_i_b"], env, tp_dim=0, fsdp_dim=None).astype(jnp.float32)
+
+    xf = xin.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * aw + ab)
+    i = jax.nn.sigmoid(xf * iw + ib)
+    log_a = -RG_C * jax.nn.softplus(lam) * r  # (b,s,lru_loc)
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if state is not None and s == 1:  # decode
+        h_prev = st["h"]
+        h = a[:, 0] * h_prev + gated_x[:, 0]
+        y = h[:, None]
+        new_state = {"conv": conv_state, "h": h}
+    else:
+        h0 = st.get("h")
+        if h0 is not None:
+            gated_x = gated_x.at[:, 0].add(a[:, 0] * h0)
+
+        def op(el_l, el_r):
+            a_l, b_l = el_l
+            a_r, b_r = el_r
+            return a_l * a_r, b_r + a_r * b_l
+
+        _, y = lax.associative_scan(op, (a, gated_x), axis=1)
+        new_state = {"conv": conv_state, "h": y[:, -1]} if want_state else None
+
+    # output gate (GeLU branch) then down projection
+    y = (y * jax.nn.gelu(gate_branch.astype(jnp.float32), approximate=True)).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", y, fetch_weight(p["w_out"], env, tp_dim=0, fsdp_dim=1).astype(y.dtype))
+    return env.psum_tp(out), new_state

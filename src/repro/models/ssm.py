@@ -1,0 +1,160 @@
+"""Mamba2 (SSD — state-space duality) block, TP-sharded over heads.
+
+Chunked SSD algorithm (arXiv:2405.21060): within a chunk the recurrence is
+computed as a masked quadratic form (attention-like, MXU-friendly); across
+chunks the (N × P) states propagate through an associative scan — and on a
+sequence-sharded mesh that scan continues across devices hop-by-hop,
+in-transit state passing (see model.py ring scan).
+
+Shapes: heads H = d_inner/head_dim sharded over tp; B/C projections are
+per-group (G groups) and replicated across tp (G < tp for our configs);
+each local head selects its group channel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import LeafSpec, ModelConfig
+from repro.models.layers import causal_conv1d, conv1d_specs, rms_norm
+from repro.models.parallel import ShardEnv, fetch_weight
+
+
+def ssm_dims(cfg: ModelConfig, env: ShardEnv):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    heads = d_in // s.head_dim
+    return d_in, heads, heads // env.tp
+
+
+def ssm_specs(cfg: ModelConfig, env: ShardEnv) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, heads, _ = ssm_dims(cfg, env)
+    gN = 2 * s.n_groups * s.d_state
+    return {
+        "w_z": LeafSpec((d, d_in), tp_dim=1, fsdp_dim=0),
+        "w_x": LeafSpec((d, d_in), tp_dim=1, fsdp_dim=0),
+        "w_bc": LeafSpec((d, gN), tp_dim=None, fsdp_dim=0),
+        "w_dt": LeafSpec((d, heads), tp_dim=1, fsdp_dim=0),
+        "conv_x": conv1d_specs(d_in, s.conv_width),
+        "conv_bc": LeafSpec((gN, s.conv_width), tp_dim=None, fsdp_dim=None, scale=0.1),
+        "A_log": LeafSpec((heads,), tp_dim=0, fsdp_dim=None, init="zeros"),
+        "dt_bias": LeafSpec((heads,), tp_dim=0, fsdp_dim=None, init="zeros"),
+        "D": LeafSpec((heads,), tp_dim=0, fsdp_dim=None, init="ones"),
+        "out_norm": LeafSpec((d_in,), tp_dim=0, fsdp_dim=None, init="ones"),
+        "w_out": LeafSpec((d_in, d), tp_dim=0, fsdp_dim=1),
+    }
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x (b,s,h,p), dt (b,s,h) [post-softplus], A (h,) negative,
+    B,C (b,s,h,N). Returns (y (b,s,h,p), last_state (b,h,N,p)).
+    """
+    b, s, h, p = x.shape
+    N = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x, dt, B, C = (jnp.pad(v, [(0, 0), (0, pad)] + [(0, 0)] * (v.ndim - 2)) for v in (x, dt, B, C))
+    S = x.shape[1]
+    nc = S // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, h, N)
+    Cc = C.reshape(b, nc, chunk, h, N)
+
+    la = dtc * A  # log decay per step (b,nc,Q,h)
+    lcum = jnp.cumsum(la, axis=2)  # within-chunk cumulative log decay
+    ltot = lcum[:, :, -1, :]  # (b,nc,h)
+
+    # ---- intra-chunk (quadratic, causal-masked) ----
+    # score[i,j] = C_i·B_j * exp(lcum_i - lcum_j) * dt_j   for j <= i
+    sc = jnp.einsum("bcihn,bcjhn->bchij", Cc, Bc)
+    li = lcum.transpose(0, 1, 3, 2)  # (b,nc,h,Q)
+    dmask = li[..., :, None] - li[..., None, :]  # (b,nc,h,i,j)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.exp(jnp.where(causal, dmask, -jnp.inf)) * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bchij,bcjhp->bcihp", sc.astype(jnp.float32), w, xc.astype(jnp.float32))
+
+    # ---- chunk states ----
+    # S_c = sum_j exp(ltot - lcum_j) dt_j B_j ⊗ x_j   (b,nc,h,N,p)
+    wj = jnp.exp(ltot[:, :, None, :] - lcum) * dtc  # (b,nc,Q,h)
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", wj, Bc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # ---- inter-chunk associative scan ----
+    decay_c = jnp.exp(ltot)  # (b,nc,h)
+
+    def op(a, bb):
+        a_d, a_s = a
+        b_d, b_s = bb
+        return a_d * b_d, b_s + b_d[..., None, None] * a_s
+
+    dall, s_incl = lax.associative_scan(op, (decay_c, states), axis=1)
+    # state entering chunk c = s_incl[c-1]
+    s_in = jnp.concatenate([jnp.zeros_like(s_incl[:, :1]), s_incl[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", Cc.astype(jnp.float32), s_in) * jnp.exp(lcum)[..., None]
+    y = (y_intra + y_inter).reshape(b, S, h, p)[:, :s]
+    return y, s_incl[:, -1]  # (b,h,N,p) final state
+
+
+def ssm_apply(p, x, cfg: ModelConfig, env: ShardEnv, *, state=None, want_state=False):
+    """x (b,s,d) → (b,s,d).  ``state``: decode {conv_x, conv_bc, ssm} dict."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in, heads, h_loc = ssm_dims(cfg, env)
+    N, G = s_cfg.d_state, s_cfg.n_groups
+    hd = s_cfg.head_dim
+
+    z = jnp.einsum("bsd,df->bsf", x, fetch_weight(p["w_z"], env, tp_dim=1, fsdp_dim=0).astype(x.dtype))
+    xin = jnp.einsum("bsd,df->bsf", x, fetch_weight(p["w_x"], env, tp_dim=1, fsdp_dim=0).astype(x.dtype))
+    bc = jnp.einsum("bsd,dg->bsg", x, fetch_weight(p["w_bc"], env, tp_dim=None, fsdp_dim=0).astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, fetch_weight(p["w_dt"], env, tp_dim=1, fsdp_dim=0).astype(x.dtype))
+
+    conv_x_w = fetch_weight(p["conv_x"], env, tp_dim=0, fsdp_dim=None)
+    conv_bc_w = fetch_weight(p["conv_bc"], env, tp_dim=None, fsdp_dim=None)
+    st = state or {}
+    xin, conv_x_state = causal_conv1d(xin, conv_x_w, st.get("conv_x"))
+    bc, conv_bc_state = causal_conv1d(bc, conv_bc_w, st.get("conv_bc"))
+
+    A_log = fetch_weight(p["A_log"], env, tp_dim=0, fsdp_dim=None)
+    dt_bias = fetch_weight(p["dt_bias"], env, tp_dim=0, fsdp_dim=None)
+    D = fetch_weight(p["D"], env, tp_dim=0, fsdp_dim=None)
+    A = -jnp.exp(A_log.astype(jnp.float32))  # (h_loc,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + dt_bias.astype(jnp.float32))
+    dt = jnp.clip(dt, s_cfg.dt_min, s_cfg.dt_max * 100)
+
+    xh = xin.reshape(b, s, h_loc, hd)
+    Bg = bc[..., : G * N].reshape(b, s, G, N)
+    Cg = bc[..., G * N:].reshape(b, s, G, N)
+    # local head i (global t*h_loc + i) -> group (traced t)
+    t = env.tp_rank()
+    gidx = ((t * h_loc + jnp.arange(h_loc)) * G) // heads  # (h_loc,) traced
+    Bh = jnp.take(Bg, gidx, axis=2)  # (b,s,h_loc,N)
+    Ch = jnp.take(Cg, gidx, axis=2)
+
+    if state is not None and s == 1:  # decode: single recurrence step
+        ssm_st = st["ssm"]  # (b,h_loc,N,hd) fp32
+        a = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])  # (b,h,1,1)
+        upd = dt[:, 0, :, None, None] * Bh[:, 0, :, :, None] * xh[:, 0, :, None, :].astype(jnp.float32)
+        new_ssm = a * ssm_st + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, 0].astype(jnp.float32), new_ssm)[:, None]
+        y = y.reshape(b, 1, h_loc, hd)
+        new_state = {"conv_x": conv_x_state, "conv_bc": conv_bc_state, "ssm": new_ssm}
+    else:
+        y, last = _ssd_chunked(xh, dt, A, Bh, Ch, s_cfg.chunk)
+        new_state = (
+            {"conv_x": conv_x_state, "conv_bc": conv_bc_state, "ssm": last}
+            if want_state else None
+        )
+
+    y = y + xh.astype(jnp.float32) * D[None, None, :, None]
+    y = y.reshape(b, s, h_loc * hd).astype(x.dtype)
+    # gated RMSNorm then down-projection (row-parallel)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 fetch_weight(p["out_norm"], env, tp_dim=0, fsdp_dim=None), cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, fetch_weight(p["w_out"], env, tp_dim=0, fsdp_dim=1).astype(y.dtype))
+    return env.psum_tp(out), new_state

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.distributed import global_grad_norm, sync_gradients
+
+__all__ = ["AdamW", "OptState", "sync_gradients", "global_grad_norm"]

@@ -1,0 +1,114 @@
+"""AdamW on storage-sharded parameters, with optional 8-bit moments.
+
+States are pytrees shaped exactly like parameter *storage* shards, so the
+optimizer is ZeRO-sharded for free (params are FSDP+TP sharded by layout).
+``block8`` quantization stores m/v as int8 with per-block fp32 absmax
+scales (block = trailing 256 elements) — the memory trick that lets
+grok-1's fp32 moments fit a 256-chip pod (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return (-n) % BLOCK
+
+
+def quantize_block8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """fp32 → (int8 codes, fp32 per-block scales). Lossy, symmetric."""
+    flat = x.reshape(-1)
+    pad = _pad_len(flat.shape[0])
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    codes = jnp.round(blocks / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return codes, scale[:, 0]
+
+
+def dequantize_block8(codes: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    out = (codes.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return out[:n].reshape(shape)
+
+
+class OptState(NamedTuple):
+    count: jax.Array
+    m: Any  # pytree (fp32 or (codes, scale))
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    eightbit: bool = False
+
+    def schedule(self, step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(1, self.warmup_steps), 1.0)
+        t = jnp.clip((step - self.warmup_steps) / max(1, self.decay_steps - self.warmup_steps), 0, 1)
+        cos = self.min_lr_ratio + (1 - self.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return self.lr * warm * cos
+
+    # ------------------------------------------------------------------ --
+    def init(self, params) -> OptState:
+        def zero_like(p):
+            if self.eightbit:
+                z = jnp.zeros((p.size + _pad_len(p.size)) // BLOCK, jnp.float32)
+                return (jnp.zeros(((p.size + _pad_len(p.size)) // BLOCK, BLOCK), jnp.int8), z)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        zeros = jax.tree_util.tree_map(zero_like, params)
+        m = zeros
+        v = jax.tree_util.tree_map(zero_like, params)
+        return OptState(count=jnp.zeros((), jnp.int32), m=m, v=v)
+
+    def update(self, grads, state: OptState, params) -> tuple[Any, OptState]:
+        """Returns (new_params, new_state). grads fp32, storage-shaped."""
+        count = state.count + 1
+        lr = self.schedule(count)
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            if self.eightbit:
+                m_f = dequantize_block8(m[0], m[1], p.shape)
+                v_f = dequantize_block8(v[0], v[1], p.shape)
+            else:
+                m_f, v_f = m, v
+            m_f = self.b1 * m_f + (1 - self.b1) * g
+            v_f = self.b2 * v_f + (1 - self.b2) * g * g
+            step = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + self.eps)
+            newp = p.astype(jnp.float32) - lr * (step + self.weight_decay * p.astype(jnp.float32))
+            newp = newp.astype(p.dtype)
+            if self.eightbit:
+                return newp, quantize_block8(m_f), quantize_block8(v_f)
+            return newp, m_f, v_f
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, OptState(count=count, m=new_m, v=new_v)

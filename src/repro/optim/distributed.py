@@ -1,0 +1,76 @@
+"""Gradient synchronisation + norms across the sharded world.
+
+Most gradients arrive already aggregated: the scenario-controlled
+``scenario_all_gather`` transpose reduce-scatters them across the FSDP and
+rep domains during backward (the paper's in-transit reduce). What remains:
+
+* leaves with ``fsdp_dim=None`` (small vectors): psum over (pod, data);
+* leaves with ``tp_dim=None`` (model-replicated): psum over the model axis
+  (each tp rank contributes its own partial);
+* ``dup_of`` leaves (kv heads / experts with copies): psum over
+  ``dup_sync_groups`` to keep the copies bit-identical.
+
+``global_grad_norm`` weights each storage element by 1/#copies so the norm
+matches the logical parameter vector exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import LeafSpec
+from repro.models.parallel import ShardEnv
+
+
+def _leaf_iter(grads, specs):
+    flat_s, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, LeafSpec))
+    flat_g = treedef.flatten_up_to(grads)
+    return flat_g, flat_s, treedef
+
+
+def sync_gradients(grads, specs, env: ShardEnv):
+    flat_g, flat_s, treedef = _leaf_iter(grads, specs)
+    out = []
+    for g, ls in zip(flat_g, flat_s):
+        if ls.fsdp_dim is None:
+            g = lax.psum(g, env.fsdp_axes)
+        if ls.tp_dim is None:
+            g = lax.psum(g, env.model_axis)
+        elif ls.dup_of:
+            groups = env.dup_sync_groups(ls.dup_of)
+            if groups is not None:
+                g = lax.psum(g, env.model_axis, axis_index_groups=groups)
+        out.append(g)
+    return treedef.unflatten(out)
+
+
+def copies_per_element(ls: LeafSpec, env: ShardEnv) -> float:
+    """How many devices hold each storage element of this leaf."""
+    c = 1.0
+    if ls.fsdp_dim is None:
+        c *= env.fsdp_size
+    if ls.tp_dim is None:
+        c *= env.model_size
+    elif ls.dup_of:
+        # slots = model_size * per_rank hold dup_of logical entities
+        per_rank = max(1, ls.dup_of // env.tp)
+        c *= env.model_size * per_rank / ls.dup_of
+    return c
+
+
+def global_grad_norm(grads, specs, env: ShardEnv) -> jax.Array:
+    flat_g, flat_s, _ = _leaf_iter(grads, specs)
+    total = jnp.zeros((), jnp.float32)
+    for g, ls in zip(flat_g, flat_s):
+        w = 1.0 / copies_per_element(ls, env)
+        total = total + jnp.sum(g.astype(jnp.float32) ** 2) * w
+    axes = tuple(env.fsdp_axes) + (env.model_axis,)
+    return jnp.sqrt(lax.psum(total, axes))
+
+
+def clip_by_global_norm(grads, specs, env: ShardEnv, max_norm: float):
+    norm = global_grad_norm(grads, specs, env)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm

@@ -1,0 +1,157 @@
+"""Optimizer (incl. 8-bit moments), checkpoint roundtrip + resharding,
+fault-tolerance policies, data-pipeline determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import AdamW, dequantize_block8, quantize_block8
+
+
+@given(st.integers(1, 2000), st.floats(0.01, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_block8_roundtrip_error_bounded(n, scale):
+    rs = np.random.RandomState(n)
+    x = jnp.asarray((rs.randn(n) * scale).astype(np.float32))
+    codes, scales = quantize_block8(x)
+    back = dequantize_block8(codes, scales, x.shape)
+    err = np.abs(np.asarray(back - x))
+    # absmax int8: error < scale/127 per 256-block
+    bound = np.asarray(jnp.max(jnp.abs(x))) / 127.0 + 1e-7
+    assert err.max() <= bound * 1.0000001
+
+
+@pytest.mark.parametrize("eightbit", [False, True])
+def test_adamw_reduces_quadratic(eightbit):
+    opt = AdamW(lr=0.1, weight_decay=0.0, warmup_steps=1, decay_steps=1000,
+                eightbit=eightbit)
+    params = {"w": jnp.asarray(np.linspace(-2, 2, 64).astype(np.float32))}
+    state = opt.init(params)
+    for _ in range(50):
+        grads = {"w": 2 * params["w"]}  # d/dw (w^2)
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.7
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.store import CheckpointStore
+
+    store = CheckpointStore(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(12.0).reshape(3, 4), "b": {"c": jnp.ones((5,))}}
+    store.save(1, tree)
+    store.save(2, jax.tree_util.tree_map(lambda x: x * 2, tree))
+    store.save(3, jax.tree_util.tree_map(lambda x: x * 3, tree))
+    assert store.list_steps() == [2, 3]  # keep=2 GC'd step 1
+    got, manifest = store.restore(tree)
+    assert manifest["step"] == 3
+    np.testing.assert_allclose(np.asarray(got["a"]), np.arange(12.0).reshape(3, 4) * 3)
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    from repro.checkpoint.store import CheckpointStore
+
+    store = CheckpointStore(str(tmp_path))
+    tree = {"x": jnp.ones((1000,))}
+    store.save(5, tree, blocking=False)
+    store.wait()
+    got, m = store.restore(tree)
+    assert m["step"] == 5
+    np.testing.assert_allclose(np.asarray(got["x"]), 1.0)
+
+
+def test_elastic_restore_across_meshes(multidevice):
+    """Checkpoint at (4,2), restore sharded onto (2,2) — elastic contract."""
+    out = multidevice("""
+    import jax, jax.numpy as jnp, numpy as np, tempfile
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.checkpoint.store import CheckpointStore
+    from repro.launch.mesh import make_mesh
+
+    d = tempfile.mkdtemp()
+    store = CheckpointStore(d)
+    mesh1 = make_mesh((4, 2), ("data", "model"))
+    x = np.arange(64, dtype=np.float32).reshape(8, 8)
+    gx = jax.device_put(x, NamedSharding(mesh1, P("data", "model")))
+    store.save(7, {"w": gx})
+    mesh2 = make_mesh((2, 2), ("data", "model"))
+    tpl = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    sh = {"w": NamedSharding(mesh2, P("data", "model"))}
+    got, m = store.restore(tpl, shardings=sh)
+    assert m["step"] == 7
+    np.testing.assert_allclose(np.asarray(got["w"]), x)
+    assert got["w"].sharding.mesh.shape["data"] == 2
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_heartbeat_and_straggler_policies():
+    from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerPolicy
+
+    clock = [0.0]
+    hb = HeartbeatMonitor(timeout_s=10.0, clock=lambda: clock[0])
+    for h in ("a", "b", "c"):
+        hb.register(h)
+    clock[0] = 5.0
+    hb.beat("a")
+    hb.beat("b")
+    clock[0] = 12.0
+    assert hb.dead_hosts() == {"c"}
+    assert sorted(hb.alive) == ["a", "b"]
+    hb.beat("c")  # recovery re-admits
+    assert hb.dead_hosts() == set()
+
+    sp = StragglerPolicy(factor=2.0, patience=2)
+    times = {"a": 1.0, "b": 1.0, "c": 5.0}
+    assert sp.observe(times) == set()
+    assert sp.observe(times) == {"c"}  # second strike
+    assert sp.observe({"a": 1.0, "b": 1.0, "c": 1.0}) == set()  # reset
+
+
+def test_elastic_mesh_plan():
+    from repro.runtime.fault_tolerance import elastic_mesh_plan
+
+    p = elastic_mesh_plan(512, model_size=16)
+    assert p.shape == (32, 16)
+    p = elastic_mesh_plan(400, model_size=16)  # 25 data hosts -> pow2 16
+    assert p.shape == (16, 16)
+    p = elastic_mesh_plan(512, model_size=16, pod_size=2)
+    assert p.shape == (2, 16, 16)
+    with pytest.raises(ValueError):
+        elastic_mesh_plan(8, model_size=16)
+
+
+def test_fleet_simulator():
+    from repro.runtime.fault_tolerance import FleetSimulator
+
+    sim = FleetSimulator(n_hosts=4, fail_at={3: ["host1"]}, recover_at={6: ["host1"]})
+    assert len(sim.hosts_at(2)) == 4
+    assert sim.hosts_at(4) == ["host0", "host2", "host3"]
+    assert len(sim.hosts_at(7)) == 4
+
+
+def test_pipeline_determinism_and_structure():
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import TrainPipeline, markov_tokens, _rng
+    from repro.models.parallel import ShardEnv
+
+    cfg = get_smoke_config("qwen1_5_0_5b")
+    env = ShardEnv(model_size=1, data_size=1, tp=1)
+    p1 = TrainPipeline(cfg, env, global_batch=4, seq=16, seed=9)
+    p2 = TrainPipeline(cfg, env, global_batch=4, seq=16, seed=9)
+    b1, b2 = p1.batch_at(5), p2.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(6)["tokens"], b1["tokens"])
+    # markov structure is learnable: next token correlated with prev
+    t = markov_tokens(_rng(0, 0), 64, 8, 128)
+    assert ((t >= 0) & (t < 64)).all()
+
+
+def test_prefetcher_order():
+    from repro.data.pipeline import Prefetcher
+
+    got = list(Prefetcher(iter(range(10)), depth=3))
+    assert got == list(range(10))

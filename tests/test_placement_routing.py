@@ -1,0 +1,110 @@
+"""Placement (greedy min-hop/min-burden + memory budget) and routing."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dag, dsl, placement as plc, routing, topology as topo
+
+
+def _paper_setup():
+    p = dsl.compile_source(dsl.PAPER_SOURCE)
+    p.collect("OUT", "E", sink_host="h6")
+    t = topo.paper_topology()
+    return p, t
+
+
+def test_paper_placement_pins_stores_and_sink():
+    p, t = _paper_setup()
+    pl = plc.place(p, t)
+    assert pl.switch_of("A") == "S1"
+    assert pl.switch_of("B") == "S2"
+    assert pl.switch_of("C") == "S3"
+    assert pl.switch_of("OUT") == "S6"
+    # reducers placed to minimize added hops: D at a dep switch
+    assert pl.switch_of("D") in ("S1", "S2")
+
+
+def test_paper_routing_connects_all_edges():
+    p, t = _paper_setup()
+    pl = plc.place(p, t)
+    rt = routing.build_routes(p, t, pl)
+    assert len(rt.routes) == sum(len(n.deps) for n in p)
+    for r in rt.routes:
+        # consecutive path elements are adjacent switches
+        for a, b in zip(r.path, r.path[1:]):
+            assert b in t.neighbors(a)
+        assert r.path[0] == pl.switch_of(r.src_label)
+        assert r.path[-1] == pl.switch_of(r.dst_label)
+    rules = rt.forwarding_rules()
+    assert all(isinstance(v, list) for v in rules.values())
+
+
+def test_memory_budget_forces_spill_or_fails():
+    p = dag.Program()
+    p.store("A", host="h1")
+    p.store("B", host="h2")
+    # two reducers that cannot share one switch under a tight budget
+    p.sum("R1", "A", "B", state_width=100)
+    p.sum("R2", "A", "B", state_width=100)
+    t = topo.paper_topology()
+    pl = plc.place(p, t, memory_budget_bytes=800)  # one 100×8B reducer each
+    assert pl.switch_of("R1") != pl.switch_of("R2")
+    with pytest.raises(plc.PlacementError):
+        plc.place(p, t, memory_budget_bytes=100)
+
+
+def test_torus_topology_geometry():
+    t = topo.TorusTopology(dims=(4, 4))
+    assert t.num_devices == 16
+    assert set(t.neighbors(0)) == {1, 3, 4, 12}
+    assert t.hop_distance(0, 15) == 2  # wrap: (0,0)->(3,3) = 1+1
+    path = t.shortest_path(0, 15)
+    assert path[0] == 0 and path[-1] == 15
+    assert len(path) - 1 == t.hop_distance(0, 15)
+    rings = t.ring_order(0)
+    assert len(rings) == 4 and all(len(r) == 4 for r in rings)
+
+
+def test_production_torus_multipod_costs():
+    t = topo.production_torus(multi_pod=True)
+    assert t.dims == (2, 16, 16)
+    # crossing the pod boundary is weighted as expensive (DCN)
+    a = t.flat((0, 0, 0))
+    b = t.flat((1, 0, 0))
+    assert t.weighted_distance(a, b) == 16.0
+    assert t.hop_distance(a, b) == 1
+
+
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(0, 200))
+@settings(max_examples=40, deadline=None)
+def test_torus_paths_match_distance(dx, dy, seed):
+    import random
+
+    t = topo.TorusTopology(dims=(dx, dy))
+    rng = random.Random(seed)
+    a = rng.randrange(t.num_devices)
+    b = rng.randrange(t.num_devices)
+    path = t.shortest_path(a, b)
+    assert len(path) - 1 == t.hop_distance(a, b)
+    for u, v in zip(path, path[1:]):
+        assert v in t.neighbors(u)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_placement_on_torus_is_valid_and_budgeted(seed):
+    import random
+
+    rng = random.Random(seed)
+    p = dag.Program()
+    for i in range(4):
+        p.store(f"s{i}", host=f"d{rng.randrange(16)}")
+    for i in range(6):
+        srcs = rng.sample(list(p.nodes), k=min(len(p.nodes), rng.randint(1, 3)))
+        p.sum(f"r{i}", *srcs, state_width=rng.randint(1, 32))
+    t = topo.TorusTopology(dims=(4, 4))
+    budget = 1 << 12
+    pl = plc.place(p, t, memory_budget_bytes=budget)
+    for sw, used in pl.state_used.items():
+        assert used <= budget
+    rt = routing.build_routes(p, t, pl)
+    assert rt.total_hops == pytest.approx(pl.total_hops)

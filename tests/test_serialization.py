@@ -1,0 +1,78 @@
+"""§3 cost model: Eq (1) equilibrium, simulator agreement, chunk model."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import serialization as ser
+
+
+def test_equilibrium_is_c_over_e():
+    assert ser.equilibrium_ingest_rate(1000.0) == pytest.approx(1000.0 / math.e)
+    # the paper's GbE number: 367.88 Mbps (paper prints 367.92)
+    assert ser.equilibrium_ingest_rate(1000.0) == pytest.approx(367.879, abs=1e-2)
+
+
+def test_penalty_complements_equilibrium():
+    C = 123.0
+    assert ser.throughput_penalty(C) + ser.equilibrium_ingest_rate(C) == pytest.approx(C)
+
+
+@given(st.floats(min_value=1e-3, max_value=1e12))
+@settings(max_examples=100, deadline=None)
+def test_compounding_converges_to_c_over_e(C):
+    r100 = ser.compounding_equilibrium(C, 100)
+    r10k = ser.compounding_equilibrium(C, 10_000)
+    target = C / math.e
+    # (1+1/N)^N ↑ e, so the sustainable rate ↓ C/e from above
+    assert r100 >= r10k * (1 - 1e-12) and r10k >= target * (1 - 1e-9)
+    assert abs(r10k - target) / target < 1e-3
+
+
+@given(st.floats(min_value=1.0, max_value=1e9), st.integers(min_value=1, max_value=2000))
+@settings(max_examples=100, deadline=None)
+def test_simulated_max_ingest_matches_closed_form(C, N):
+    sim = ser.max_sustainable_ingest(C, N)
+    closed = ser.compounding_equilibrium(C, N)
+    assert sim == pytest.approx(closed, rel=1e-6)
+
+
+def test_item_level_refinement():
+    # k pipeline passes per k-item packet → C/k packets/s
+    assert ser.item_level_sustainable_ingest(1000.0, 10) == pytest.approx(100.0)
+    with pytest.raises(ValueError):
+        ser.item_level_sustainable_ingest(1000.0, 0)
+
+
+def test_serialization_decision_prefers_switch_for_slow_cpu():
+    # CPU far slower than the (1−1/e)-penalized link → offload wins (§4 S3)
+    d = ser.choose_serialization(1e9, cpu_serialize_bps=1e7, link_bps=1e9)
+    assert d.on_switch
+    # infinitely fast CPU → serialize at the server (full line rate)
+    d2 = ser.choose_serialization(1e9, cpu_serialize_bps=1e15, link_bps=1e9)
+    assert not d2.on_switch
+
+
+@given(st.floats(min_value=1e3, max_value=1e12), st.integers(min_value=2, max_value=512))
+@settings(max_examples=50, deadline=None)
+def test_optimal_chunks_beats_single_message(nbytes, world):
+    link = ser.LinkModel()
+    c = ser.optimal_chunks(nbytes, world, link)
+    assert c >= 1
+    assert ser.ring_all_reduce_time(nbytes, world, link, c) <= \
+        ser.ring_all_reduce_time(nbytes, world, link, 1) + 1e-12
+
+
+def test_optimal_bucket_bytes_bounds():
+    link = ser.LinkModel()
+    b = ser.optimal_bucket_bytes(1e9, 256, link)
+    assert (1 << 20) <= b <= 1e9
+
+
+def test_packet_format_accounting():
+    from repro.core.primitives import DEFAULT_PACKET
+
+    assert DEFAULT_PACKET.header_bits == 64 + 8 + 8 + 8  # §5 Fig 11
+    assert DEFAULT_PACKET.data_bits == 64
+    assert 0 < DEFAULT_PACKET.goodput_fraction < 1
+    assert DEFAULT_PACKET.packets_per_mtu(1500) == (1500 * 8 - 88) // 64

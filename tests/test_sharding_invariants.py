@@ -1,0 +1,91 @@
+"""Property tests on the sharding algebra (ShardEnv groups/maps/layouts)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import LeafSpec
+from repro.models.parallel import ShardEnv, pad_vocab
+
+
+def _env(model_size, tp, data=4):
+    return ShardEnv(model_size=model_size, data_size=data, tp=tp)
+
+
+@given(st.sampled_from([1, 2, 4, 8, 16]), st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=30, deadline=None)
+def test_tp_rep_groups_partition_axis(model_size, tp):
+    if tp > model_size or model_size % tp:
+        return
+    env = _env(model_size, tp)
+    for groups in (env.tp_groups, env.rep_groups):
+        if groups is None:
+            continue
+        flat = sorted(i for g in groups for i in g)
+        assert flat == list(range(model_size))  # exact partition
+        assert len({len(g) for g in groups}) == 1  # uniform
+
+
+@given(st.sampled_from([1, 2, 4, 8, 16]), st.sampled_from([1, 2, 4, 8]),
+       st.sampled_from([1, 2, 4, 8, 10, 16, 32]))
+@settings(max_examples=60, deadline=None)
+def test_dup_groups_and_map_consistency(model_size, tp, n_logical):
+    if tp > model_size or model_size % tp:
+        return
+    if n_logical % tp and tp % n_logical:
+        return  # unsupported combination (config resolver avoids it)
+    env = _env(model_size, tp)
+    dm = env.dup_map(n_logical)
+    per_rank = max(1, n_logical // tp)
+    assert len(dm) == model_size * per_rank
+    assert set(dm) == set(range(n_logical))  # every logical entity stored
+    groups = env.dup_sync_groups(n_logical)
+    if groups is None:
+        # no duplication: map must be a bijection per rank set
+        assert len(dm) == n_logical
+        return
+    flat = sorted(i for g in groups for i in g)
+    assert flat == list(range(model_size))
+    # all members of a sync group hold identical logical entities
+    for g in groups:
+        ents = {tuple(dm[m * per_rank + i] for i in range(per_rank)) for m in g}
+        assert len(ents) == 1, (g, ents)
+
+
+@given(st.integers(1, 300_000), st.sampled_from([2, 4, 8, 16]))
+@settings(max_examples=50, deadline=None)
+def test_pad_vocab(v, p):
+    vp = pad_vocab(v, p)
+    assert vp % p == 0 and 0 <= vp - v < p
+
+
+@given(st.sampled_from([1, 2, 4]), st.sampled_from([1, 2, 4]),
+       st.integers(0, 1))
+@settings(max_examples=40, deadline=None)
+def test_leafspec_local_shapes(ms, fsdp, stacked):
+    ls = LeafSpec((8 * ms, 16 * fsdp), tp_dim=0, fsdp_dim=1)
+    if stacked:
+        ls = ls.with_layer_dim(3)
+    loc = ls.local_shape(ms, fsdp)
+    glob = ls.shape
+    n_loc = int(np.prod(loc))
+    assert n_loc * ms * fsdp == int(np.prod(glob))
+    spec = ls.partition_spec(("data",))
+    assert spec[ls.tp_dim] == "model"
+
+
+@given(st.sampled_from([(16, 16, 256), (16, 4, 256), (16, 2, 128),
+                        (16, 16, 1), (16, 8, 32)]))
+@settings(max_examples=20, deadline=None)
+def test_batch_layout_conservation(case):
+    ms, tp, batch = case
+    env = _env(ms, tp, data=16)
+    from repro.launch.shapes import batch_layout
+
+    dims, spec, b_loc = batch_layout(env, batch)
+    # total logical batch is conserved (replication allowed, never loss)
+    md = dims[-1]
+    dp = int(np.prod(dims)) // md * (md if env.batch_split_rep(batch) else 1)
+    assert b_loc * dp >= min(batch, b_loc * dp)
+    assert b_loc >= 1
+    if batch % (env.fsdp_size * env.rep) == 0 and env.rep > 1:
+        assert b_loc * env.fsdp_size * env.rep == batch
