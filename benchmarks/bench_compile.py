@@ -1,0 +1,85 @@
+"""Compiler benchmark: time compile + simulate across program sizes and
+record optimized-vs-flat §3 cost, writing a BENCH_compile.json artifact.
+
+    PYTHONPATH=src:. python benchmarks/run.py compile
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro import compiler
+from repro.core import dsl, topology, wordcount
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_compile.json")
+
+
+def _time_us(fn, repeats: int = 5) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _case(name: str, program_or_src, topo, inputs) -> dict:
+    plan = compiler.compile_best(program_or_src, topo)  # cost model picks pipeline
+    flat = compiler.compile(program_or_src, topo, passes=compiler.UNOPTIMIZED_PASSES)
+    compile_us = _time_us(lambda: compiler.compile(program_or_src, topo))
+    simulate_us = _time_us(lambda: plan.simulate(inputs))
+    sim = plan.simulate(inputs)
+    sim_flat = flat.simulate(inputs)
+    return {
+        "name": name,
+        "nodes_in": len(flat.program),
+        "nodes_out": len(plan.program),
+        "optimized": len(plan.program) != len(flat.program)
+        or plan.cost.scalar != flat.cost.scalar,
+        "compile_us": round(compile_us, 2),
+        "simulate_us": round(simulate_us, 2),
+        "sim_time_best_us": round(sim.report.time_s * 1e6, 4),
+        "sim_time_flat_us": round(sim_flat.report.time_s * 1e6, 4),
+        "speedup": round(sim_flat.report.time_s / max(sim.report.time_s, 1e-30), 3),
+        "hops_best": sim.report.edge_hops,
+        "hops_flat": sim_flat.report.edge_hops,
+        "recirc_best": sim.report.recirculations,
+        "recirc_flat": sim_flat.report.recirculations,
+    }
+
+
+def run() -> list[tuple[str, float, str]]:
+    records = []
+
+    # §5.2 paper example on the Fig-10 fabric
+    src = dsl.PAPER_SOURCE + 'OUT := COLLECT(E, "h6");\n'
+    records.append(_case(
+        "paper_5_2", src, topology.paper_topology(),
+        {"A": np.array([3.0]), "B": np.array([4.0]), "C": np.array([5.0])},
+    ))
+
+    # word-count SUM chains of growing width on 1-D tori
+    for n in (4, 8, 16):
+        vocab = 64
+        prog = wordcount.wordcount_program(n, vocab)
+        topo = topology.TorusTopology(dims=(n,))
+        inputs = {f"s{i}": np.ones((vocab,)) for i in range(n)}
+        records.append(_case(f"wordcount_n{n}", prog, topo, inputs))
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(records, f, indent=2)
+
+    rows = []
+    for r in records:
+        rows.append((
+            f"compile.{r['name']}", r["compile_us"],
+            f"simulate={r['simulate_us']:.0f}us "
+            f"sim_best={r['sim_time_best_us']}us sim_flat={r['sim_time_flat_us']}us "
+            f"speedup={r['speedup']}x hops={r['hops_best']}/{r['hops_flat']}",
+        ))
+    rows.append(("compile.artifact", 0.0, f"wrote {os.path.basename(OUT_PATH)}"))
+    return rows

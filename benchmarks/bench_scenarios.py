@@ -105,4 +105,21 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("scenarios.paper_calibrated", 0.0,
                  f"S2={sp2:.2f}x(paper 5.32x) S3={sp3:.2f}x(paper ~20x) "
                  f"S3/S2={sp3/sp2:.2f}x(paper >=4.61x)"))
+
+    # Compiled-plan cross-check: the same S1/S2/S3 structures as p4mr DAGs
+    # through the pass-based compiler, priced by the packet simulator (one
+    # §3 cost model drives placement AND pricing — no hand-derived terms).
+    from repro.core.scenarios import Scenario, simulated_scenario_time
+
+    for n in (4, 8, 16):
+        ts = {
+            s: simulated_scenario_time(n, s, state_width=64)
+            for s in (Scenario.S1_HOST, Scenario.S2_IN_NET, Scenario.S3_IN_NET_MAP)
+        }
+        rows.append((
+            f"scenarios.plan_sim.n{n}", ts[Scenario.S1_HOST] * 1e6,
+            f"S2={ts[Scenario.S1_HOST] / ts[Scenario.S2_IN_NET]:.2f}x "
+            f"S3={ts[Scenario.S1_HOST] / ts[Scenario.S3_IN_NET_MAP]:.2f}x "
+            f"(compiled-plan simulator)",
+        ))
     return rows

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   bench_serialization   — §3 Eq (1) table
   bench_cpu_map_reduce  — Fig 6 & 7 (measured CPU map/reduce)
   bench_scenarios       — Fig 4 & 5 (S1/S2/S3 JCT speed-ups)
+  bench_compile         — pass pipeline: compile+simulate time, opt vs flat
   bench_collectives     — in-transit vs endpoint aggregation (TPU form)
   bench_kernels         — Pallas kernel oracles + allclose
   bench_roofline        — §Roofline aggregation of the dry-run sweeps
@@ -15,6 +16,7 @@ import traceback
 
 from benchmarks import (
     bench_collectives,
+    bench_compile,
     bench_cpu_map_reduce,
     bench_kernels,
     bench_roofline,
@@ -26,6 +28,7 @@ MODULES = [
     ("serialization", bench_serialization),
     ("cpu_map_reduce", bench_cpu_map_reduce),
     ("scenarios", bench_scenarios),
+    ("compile", bench_compile),
     ("collectives", bench_collectives),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),

@@ -1,5 +1,7 @@
-"""The paper's §5.2 example, end to end: DSL → AST → DAG → placement →
-routing → per-switch codelets → execution on the Fig-10 topology.
+"""The paper's §5.2 example through the pass-based compiler: DSL →
+passes (DCE, reduce-tree rebalance, combiners) → CompiledPlan → both
+backends (packet simulator + JAX ppermute codelet on the Fig-10
+topology), plus the word-count DAG end to end.
 
     PYTHONPATH=src python examples/wordcount_dag.py
 """
@@ -7,61 +9,62 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.core import codelet, dsl, placement, routing, topology
+from repro import compiler
+from repro.core import dsl, topology, wordcount
 
 
-def main():
+def paper_example():
     print("p4mr source (§5.2):")
-    print(dsl.PAPER_SOURCE)
-    ast = dsl.parse_ast(dsl.PAPER_SOURCE)
-    print("AST:", dsl.ast_to_json(ast)[:240], "...\n")
+    src = dsl.PAPER_SOURCE + 'OUT := COLLECT(E, "h6");\n'
+    print(src)
 
-    prog = dsl.ast_to_program(ast)
-    prog.collect("OUT", "E", sink_host="h6")  # h6 = collection endpoint
-    print("DAG:", {n.name: list(n.deps) for n in prog}, "depth =", prog.depth())
+    # the 6-switch Fig-10 graph, embedded in an 8-device axis for the mesh
+    topo = topology.paper_topology().as_indexed(num_devices=8)
+    plan = compiler.compile(src, topo)
+    unopt = compiler.compile(src, topo, passes=compiler.UNOPTIMIZED_PASSES)
+    print(plan.describe(), "\n")
 
-    topo = topology.paper_topology()
-    name2id = {f"S{i+1}": i for i in range(6)}
-    id2name = {v: k for k, v in name2id.items()}
+    ins = {"A": np.array([3.0]), "B": np.array([4.0]), "C": np.array([5.0])}
 
-    class View:  # embed the 6-switch graph in the 8-device axis
-        switches = list(range(8))
+    # backend 1: packet-level simulator (no devices)
+    sim = plan.simulate(ins)
+    sim_u = unopt.simulate(ins)
+    print(f"simulator: OUT={sim.outputs['OUT'][0]} "
+          f"hops={sim.report.edge_hops} recirc={sim.report.recirculations} "
+          f"time={sim.report.time_s * 1e6:.2f}us "
+          f"(unoptimized {sim_u.report.time_s * 1e6:.2f}us)")
+    assert sim.outputs["OUT"][0] == 12.0
+    assert sim.report.time_s <= sim_u.report.time_s
 
-        def attach_switch(self, h):
-            return name2id[topo.attach_switch(h)]
+    # backend 2: JAX ppermute codelet on an 8-device mesh
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
 
-        def shortest_path(self, a, b):
-            if a >= 6 or b >= 6:
-                return [a, b]
-            return [name2id[s] for s in topo.shortest_path(id2name[a], id2name[b])]
-
-        def hop_distance(self, a, b):
-            return len(self.shortest_path(a, b)) - 1
-
-    view = View()
-    pl = placement.place(prog, view)
-    print("placement:", {k: id2name.get(v, v) for k, v in pl.assignment.items()})
-    rt = routing.build_routes(prog, view, pl)
-    print(f"routes: total_hops={rt.total_hops} max_hops={rt.max_hops}")
-    for r in rt.routes:
-        print("  ", r.src_label, "->", r.dst_label, ":",
-              [id2name.get(s, s) for s in r.path])
-
-    step = codelet.compile_program(prog, pl, rt)
+    step = plan.jax_step()
     mesh = jax.make_mesh((8,), ("all",), axis_types=(jax.sharding.AxisType.Auto,))
-    ins = {"A": np.array([3.0], np.float32), "B": np.array([4.0], np.float32),
-           "C": np.array([5.0], np.float32)}
-    big = {k: jnp.asarray(np.tile(v[None], (8, 1))) for k, v in ins.items()}
+    big = {k: jnp.asarray(np.tile(np.asarray(v, np.float32)[None], (8, 1)))
+           for k, v in ins.items()}
     out = jax.shard_map(step, mesh=mesh, in_specs=P("all"), out_specs=P("all"))(big)
     result = float(np.asarray(out["OUT@all"])[0, 0])
-    print(f"\nE = SUM(C, SUM(A, B)) computed in transit: {result} (expected 12.0)")
+    print(f"jax backend: E = SUM(C, SUM(A, B)) in transit = {result} (expected 12.0)")
     assert result == 12.0
 
 
+def wordcount_example():
+    vocab, shards = 32, 6
+    rs = np.random.RandomState(0)
+    word_shards = [rs.randint(0, vocab, size=(40,)).astype(np.int32) for _ in range(shards)]
+    counts, sim = wordcount.wordcount_via_plan(word_shards, vocab)
+    ref = wordcount.wordcount_reference(word_shards, vocab)
+    np.testing.assert_array_equal(counts, ref)
+    print(f"\nword-count via CompiledPlan: {shards} shards, vocab={vocab}: "
+          f"counts match oracle; makespan={sim.report.makespan_ticks} ticks, "
+          f"recirc={sim.report.recirculations}")
+
+
 if __name__ == "__main__":
-    main()
+    paper_example()
+    wordcount_example()

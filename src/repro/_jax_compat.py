@@ -1,0 +1,68 @@
+"""Compatibility shims so one codebase runs on both old and new JAX.
+
+The repo targets the modern public API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``); on
+older 0.4.x installs those live under ``jax.experimental`` or do not
+exist. Importing this module installs forward-compatible aliases onto
+``jax`` itself, so call sites stay written against the new API.
+
+Imported for its side effects by ``repro.core`` and ``repro.launch.mesh``
+(and by the test harness before multi-device subprocess snippets run).
+Idempotent; a no-op on new-enough JAX.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):  # mirror of new-jax jax.sharding.AxisType
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if hasattr(jax, "make_mesh"):
+        params = inspect.signature(jax.make_mesh).parameters
+        if "axis_types" not in params:
+            _orig_make_mesh = jax.make_mesh
+
+            @functools.wraps(_orig_make_mesh)
+            def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+                del axis_types  # pre-AxisType meshes are implicitly Auto
+                return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+            jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, *args, **kwargs):
+            # new API spells the replication check ``check_vma``
+            if "check_vma" in kwargs:
+                kwargs["check_rep"] = kwargs.pop("check_vma")
+            return _shard_map(f, *args, **kwargs)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax.lax, "pvary"):
+        # pre-VMA shard_map has no varying-axis tracking; pvary is identity
+        jax.lax.pvary = lambda x, axis_names: x
+
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            # psum of the unit literal is constant-folded to the (concrete,
+            # Python int) axis size on every jax that lacks lax.axis_size.
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+
+_install()

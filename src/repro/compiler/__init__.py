@@ -1,0 +1,51 @@
+"""repro.compiler — pass-based p4mr compiler driver (§5 Fig 9).
+
+    from repro import compiler
+    plan = compiler.compile(dsl.PAPER_SOURCE, topology.paper_topology())
+    plan.simulate(inputs)     # packet-level dataplane simulator
+    plan.jax_step()           # SPMD ppermute codelet for a device mesh
+
+Pipeline: parse → validate → dead-node-elim → rebalance-reduce-tree →
+insert-combiners → place (§3 cost model) → route → emit. Every stage is a
+registered pass over a shared ``CompileCtx``; see ``driver.py``.
+"""
+from repro.compiler.cost import CostModel, PlanCost, Traffic
+from repro.compiler.driver import (
+    DEFAULT_PASSES,
+    UNOPTIMIZED_PASSES,
+    CompileCtx,
+    PassManager,
+    PassRecord,
+    compile,
+    compile_best,
+    get_pass,
+    register_pass,
+    registered_passes,
+)
+from repro.compiler.jax_backend import emit_step
+from repro.compiler.plan import CompiledPlan
+from repro.compiler.simulator import SimReport, SimResult, SimulatorBackend
+
+# importing the pass module registers the built-in passes
+from repro.compiler import passes as _passes  # noqa: F401
+
+__all__ = [
+    "CostModel",
+    "PlanCost",
+    "Traffic",
+    "compile_best",
+    "DEFAULT_PASSES",
+    "UNOPTIMIZED_PASSES",
+    "CompileCtx",
+    "PassManager",
+    "PassRecord",
+    "compile",
+    "get_pass",
+    "register_pass",
+    "registered_passes",
+    "emit_step",
+    "CompiledPlan",
+    "SimReport",
+    "SimResult",
+    "SimulatorBackend",
+]

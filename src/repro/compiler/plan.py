@@ -1,0 +1,94 @@
+"""``CompiledPlan`` — the artifact the pass pipeline produces.
+
+One object bundling everything downstream consumers need: the (possibly
+optimizer-rewritten) program, its placement and routing on the target
+topology, the §3 cost estimate, and the two execution backends:
+
+* ``jax_step()``  — SPMD ``ppermute`` codelet for a device mesh;
+* ``simulate()``  — packet-level dataplane simulator (no devices).
+
+``scenarios``, ``wordcount``, the examples and the benchmarks all consume
+this instead of hand-wiring parse → place → route → codegen.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Hashable, Mapping
+
+import numpy as np
+
+from repro.compiler.cost import CostModel, PlanCost
+from repro.core import dag
+from repro.core.placement import Placement
+from repro.core.routing import RoutingTable
+
+NodeId = Hashable
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    program: dag.Program
+    topology: Any
+    placement: Placement
+    routes: RoutingTable
+    cost_model: CostModel
+    cost: PlanCost
+    pins: dict[str, NodeId] = dataclasses.field(default_factory=dict)
+    trace: tuple = ()  # PassRecords from the driver, for diagnostics
+
+    # ------------------------------------------------------------ backends --
+    def jax_step(self, *, axis_name: str = "all", item_dtype=None):
+        """SPMD step function (shard_map over a 1-D ``axis_name`` device
+        axis whose indices are the topology's switch ids)."""
+        import jax.numpy as jnp
+
+        from repro.compiler.jax_backend import emit_step
+
+        return emit_step(
+            self.program,
+            self.placement,
+            self.routes,
+            axis_name=axis_name,
+            item_dtype=item_dtype if item_dtype is not None else jnp.float32,
+        )
+
+    def simulate(self, inputs: Mapping[str, np.ndarray]):
+        """Run the packet-level simulator; returns a ``SimResult``."""
+        from repro.compiler.simulator import SimulatorBackend
+
+        return SimulatorBackend(self).run(inputs)
+
+    def execute_reference(self, inputs: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
+        """Pure-numpy oracle on this plan's (rewritten) program."""
+        from repro.core.codelet import execute_reference
+
+        return execute_reference(self.program, inputs)
+
+    # ---------------------------------------------------------- inspection --
+    @property
+    def sinks(self) -> list[str]:
+        return self.program.sinks()
+
+    def describe(self) -> str:
+        """Human-readable plan dump: optimized surface syntax, placement,
+        routing totals and the cost estimate."""
+        from repro.core import dsl
+
+        lines = ["# optimized program", dsl.program_to_source(self.program).rstrip()]
+        lines.append("# placement")
+        for label, sw in self.placement.assignment.items():
+            pin = "  [pinned]" if label in self.pins else ""
+            lines.append(f"  {label} -> {sw}{pin}")
+        lines.append(
+            f"# routing: total_hops={self.routes.total_hops} max_hops={self.routes.max_hops}"
+        )
+        lines.append(
+            f"# cost: wire={self.cost.wire_bytes:.0f}B packet_hops={self.cost.packet_hops} "
+            f"time={self.cost.serial_time_s * 1e6:.2f}us "
+            f"state_max={self.cost.state_bytes_max}B"
+        )
+        if self.trace:
+            lines.append("# passes")
+            for rec in self.trace:
+                lines.append(f"  {rec.name}: {rec.summary} ({rec.wall_us:.0f}us)")
+        return "\n".join(lines)

@@ -1,0 +1,153 @@
+"""Packet-level dataplane simulator backend.
+
+Executes a ``CompiledPlan`` hop by hop without any devices, so §3
+cost-model predictions can be validated against observed behaviour (the
+role the paper's Mininet deployment plays). The model, deliberately
+simple and deterministic:
+
+* time advances in **ticks**; forwarding a batch of packets across one
+  hop takes one tick (the hop latency);
+* each switch forwards **one batch per tick** — two batches contending
+  for the same switch queue, and the loser's wait is counted as queueing
+  delay (``queued_batches`` / ``queue_delay_ticks``);
+* a Reduce merging k upstream batches holds state on its switch and
+  **recirculates** the stored partial once per additional source
+  (k−1 recirculations), the §3 stateful-processing penalty;
+* numeric payloads are carried along, so simulator outputs are the same
+  values ``codelet.execute_reference`` produces — functional equivalence
+  and timing come from one run.
+
+``SimReport.edge_hops`` equals ``RoutingTable.total_hops`` by
+construction (each route edge is traversed exactly once per batch);
+tests pin that invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable, Mapping
+
+import numpy as np
+
+from repro.core import primitives as prim
+
+NodeId = Hashable
+
+
+@dataclasses.dataclass(frozen=True)
+class SimReport:
+    edge_hops: int  # Σ route hops (matches RoutingTable.total_hops)
+    packet_hops: int  # hop traversals × packets per batch
+    recirculations: int
+    makespan_ticks: int
+    queue_delay_ticks: int
+    queued_batches: dict[NodeId, int]  # per-switch batches that had to wait
+    wire_bytes: float
+    time_s: float  # modelled completion time (the cost scalar)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    outputs: dict[str, np.ndarray]  # per program sink, numeric payloads
+    report: SimReport
+
+
+class SimulatorBackend:
+    """Hop-by-hop execution of a ``CompiledPlan`` (no devices needed)."""
+
+    def __init__(self, plan):
+        self.plan = plan
+
+    def run(self, inputs: Mapping[str, np.ndarray]) -> SimResult:
+        plan = self.plan
+        program = plan.program
+        cm = plan.cost_model
+        traffic = cm.traffic(program)
+        route_of = {(r.src_label, r.dst_label): r.path for r in plan.routes.routes}
+
+        values: dict[str, np.ndarray] = {}
+        ready: dict[str, int] = {}  # tick the label's value sits at its switch
+        busy_until: dict[NodeId, int] = {}
+        queued: dict[NodeId, int] = {}
+        edge_hops = packet_hops = recirc = queue_delay = 0
+        wire_bytes = 0.0
+
+        def forward(label: str, dst_label: str) -> int:
+            """Move ``label``'s batch along its route; returns arrival tick."""
+            nonlocal edge_hops, packet_hops, queue_delay, wire_bytes
+            path = route_of[(label, dst_label)]
+            pk = traffic[label].packets
+            t = ready[label]
+            for a in path[:-1]:
+                start = max(t, busy_until.get(a, 0))
+                if start > t:
+                    queue_delay += start - t
+                    queued[a] = queued.get(a, 0) + 1
+                busy_until[a] = start + 1
+                t = start + 1  # one tick to cross the hop
+                edge_hops += 1
+                packet_hops += pk
+                wire_bytes += cm.wire_bytes(pk)
+            return t
+
+        for node in program.toposort():
+            if isinstance(node, prim.Store):
+                if node.name not in inputs:
+                    raise KeyError(
+                        f"missing input for store {node.name!r}: simulate() needs "
+                        f"one array per Store node ({sorted(program.sources())})"
+                    )
+                values[node.name] = np.asarray(inputs[node.name], dtype=np.float64)
+                ready[node.name] = 0
+            elif isinstance(node, prim.MapFn):
+                t = forward(node.src, node.name)
+                import jax.numpy as jnp
+
+                values[node.name] = np.asarray(
+                    prim.MAP_FNS[node.fn_name](jnp.asarray(values[node.src]))
+                )
+                ready[node.name] = t
+            elif isinstance(node, prim.KeyBy):
+                values[node.name] = values[node.src]
+                ready[node.name] = forward(node.src, node.name)
+            elif isinstance(node, prim.Reduce):
+                arrivals = []
+                acc = None
+                for s in node.srcs:
+                    arrivals.append(forward(s, node.name))
+                    v = values[s].astype(np.float64)
+                    if acc is None:
+                        acc = v
+                    elif node.kind in (prim.ReduceKind.SUM, prim.ReduceKind.COUNT):
+                        acc = acc + v
+                    elif node.kind is prim.ReduceKind.MAX:
+                        acc = np.maximum(acc, v)
+                    else:
+                        acc = np.minimum(acc, v)
+                merges = len(node.srcs) - 1
+                recirc += merges
+                values[node.name] = acc
+                ready[node.name] = max(arrivals) + merges
+            elif isinstance(node, prim.Collect):
+                values[node.name] = values[node.src]
+                ready[node.name] = forward(node.src, node.name)
+            else:  # pragma: no cover - future node types
+                raise TypeError(type(node))
+
+        sinks = program.sinks()
+        makespan = max((ready[s] for s in sinks), default=0)
+        time_s = (
+            makespan * cm.hop_latency_s
+            + wire_bytes * 8.0 / cm.link_bps
+            + recirc * cm.recirculation_s
+        )
+        report = SimReport(
+            edge_hops=edge_hops,
+            packet_hops=packet_hops,
+            recirculations=recirc,
+            makespan_ticks=makespan,
+            queue_delay_ticks=queue_delay,
+            queued_batches=queued,
+            wire_bytes=wire_bytes,
+            time_s=time_s,
+        )
+        return SimResult(outputs={s: values[s] for s in sinks}, report=report)

@@ -8,29 +8,42 @@ Public surface:
     scenarios.aggregate              — S1/S2/S3 (+native/hierarchical) DP sync
     serialization.*                  — §3 cost model (r = C/e) + chunk model
 """
+import repro._jax_compat  # noqa: F401  (installs old-jax API shims)
+
 from repro.core import collectives, primitives, serialization
 from repro.core.codelet import compile_program, execute_reference
 from repro.core.dag import Program, ProgramError, paper_example
-from repro.core.dsl import PAPER_SOURCE, compile_source, parse_ast
+from repro.core.dsl import PAPER_SOURCE, compile_source, parse_ast, program_to_source
 from repro.core.placement import Placement, PlacementError, place
 from repro.core.routing import RoutingTable, build_routes
-from repro.core.scenarios import Scenario, aggregate, wire_bytes_per_device
+from repro.core.scenarios import (
+    Scenario,
+    aggregate,
+    compile_scenario,
+    scenario_program,
+    simulated_scenario_time,
+    wire_bytes_per_device,
+)
 from repro.core.topology import SwitchTopology, TorusTopology, paper_topology, production_torus
 from repro.core.wordcount import (
     local_histogram,
     wordcount_host_baseline,
+    wordcount_program,
     wordcount_reference,
     wordcount_step,
+    wordcount_via_plan,
 )
 
 __all__ = [
     "collectives", "primitives", "serialization",
     "compile_program", "execute_reference",
     "Program", "ProgramError", "paper_example",
-    "PAPER_SOURCE", "compile_source", "parse_ast",
+    "PAPER_SOURCE", "compile_source", "parse_ast", "program_to_source",
     "Placement", "PlacementError", "place",
     "RoutingTable", "build_routes",
-    "Scenario", "aggregate", "wire_bytes_per_device",
+    "Scenario", "aggregate", "compile_scenario", "scenario_program",
+    "simulated_scenario_time", "wire_bytes_per_device",
     "SwitchTopology", "TorusTopology", "paper_topology", "production_torus",
-    "local_histogram", "wordcount_host_baseline", "wordcount_reference", "wordcount_step",
+    "local_histogram", "wordcount_host_baseline", "wordcount_program",
+    "wordcount_reference", "wordcount_step", "wordcount_via_plan",
 ]

@@ -1,48 +1,24 @@
-"""Codelet generation: placed p4mr program → executable JAX SPMD step.
+"""Codelet generation shim + the pure-numpy reference interpreter.
 
-The paper's compiler emits one P4 codelet per switch. Under SPMD there is
-one program executed by every device, where per-device behaviour branches
-on ``lax.axis_index`` — the moral equivalent: each device *is* its switch
-and acts only on packets addressed to it. Packet forwarding along a
-route's hop sequence is one ``lax.ppermute`` per hop (a partial
-permutation: devices off the path receive zeros, i.e. no packet).
+The SPMD ``ppermute`` emitter moved into the pass-based compiler
+(``repro.compiler.jax_backend.emit_step``, reachable as
+``CompiledPlan.jax_step()``). ``compile_program`` remains here as a thin
+deprecated wrapper so pre-compiler callers keep working.
 
-``compile_program`` returns a function suitable for ``jax.jit`` /
-``shard_map`` over a 1-D device axis whose indices equal the topology's
-switch ids (a ``TorusTopology`` guarantees this). ``execute_reference``
-is the pure-numpy oracle used by tests.
-
-This is the *functional* execution path, mirroring the paper's Mininet
-validation. The performance path (training-scale aggregation) uses the
-vectorized schedules in ``collectives.py``/``scenarios.py`` that the same
-placement/routing machinery justifies.
+``execute_reference`` is the oracle both backends (JAX and the packet
+simulator) are validated against.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Mapping
+import warnings
+from typing import Mapping
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from repro.core import dag, primitives as prim
 from repro.core.placement import Placement
 from repro.core.routing import RoutingTable
-
-
-def _hop(value, axis_name, src, dst):
-    """Forward ``value`` from device ``src`` to ``dst`` (one wire hop)."""
-    if src == dst:
-        return value
-    return lax.ppermute(value, axis_name, [(int(src), int(dst))])
-
-
-def _route_value(value, axis_name, path):
-    for a, b in zip(path, path[1:]):
-        value = _hop(value, axis_name, a, b)
-    return value
 
 
 def compile_program(
@@ -53,57 +29,19 @@ def compile_program(
     axis_name: str = "all",
     item_dtype=jnp.float32,
 ):
-    """Emit the SPMD codelet.
+    """Deprecated: use ``repro.compiler.compile(...).jax_step()`` (or
+    ``repro.compiler.emit_step`` when placement/routes are precomputed)."""
+    warnings.warn(
+        "repro.core.codelet.compile_program is deprecated; use "
+        "repro.compiler.compile(...).jax_step() instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.compiler.jax_backend import emit_step
 
-    Returned ``step(inputs)``: ``inputs[label]`` is the *local* shard of
-    every Store node — shape ``(width,)`` on the Store's own switch and on
-    every other device (contents ignored off-switch, typically zeros).
-    Returns ``{sink_label: value}`` where the value is valid on the sink's
-    switch (zeros elsewhere), plus a replicated copy under key
-    ``label + "@all"`` for convenience (one extra broadcast).
-    """
-    program.validate()
-    route_of = {(r.src_label, r.dst_label): r.path for r in routes.routes}
-    order = list(program.toposort())
-    sinks = program.sinks()
-
-    def step(inputs: Mapping[str, jax.Array]):
-        me = lax.axis_index(axis_name)
-        values: dict[str, jax.Array] = {}
-        for node in order:
-            if isinstance(node, prim.Store):
-                on_switch = me == placement.switch_of(node.name)
-                values[node.name] = jnp.where(on_switch, inputs[node.name].astype(item_dtype), 0)
-            elif isinstance(node, prim.MapFn):
-                v = _route_value(values[node.src], axis_name, route_of[(node.src, node.name)])
-                values[node.name] = prim.MAP_FNS[node.fn_name](v)
-            elif isinstance(node, prim.KeyBy):
-                # functional path: keep the value; bucketing is realized by
-                # the shuffle in wordcount.py (all_to_all), not hop routing.
-                values[node.name] = _route_value(
-                    values[node.src], axis_name, route_of[(node.src, node.name)]
-                )
-            elif isinstance(node, prim.Reduce):
-                acc = None
-                for s in node.srcs:
-                    v = _route_value(values[s], axis_name, route_of[(s, node.name)])
-                    acc = v if acc is None else node.kind.combine(acc, v)
-                # reducer state lives only on its own switch
-                on_switch = me == placement.switch_of(node.name)
-                values[node.name] = jnp.where(on_switch, acc, 0)
-            elif isinstance(node, prim.Collect):
-                values[node.name] = _route_value(
-                    values[node.src], axis_name, route_of[(node.src, node.name)]
-                )
-            else:  # pragma: no cover
-                raise TypeError(type(node))
-        out = {}
-        for s in sinks:
-            out[s] = values[s]
-            out[s + "@all"] = lax.psum(values[s], axis_name)  # collection broadcast
-        return out
-
-    return step
+    return emit_step(
+        program, placement, routes, axis_name=axis_name, item_dtype=item_dtype
+    )
 
 
 def execute_reference(program: dag.Program, inputs: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
@@ -114,8 +52,6 @@ def execute_reference(program: dag.Program, inputs: Mapping[str, np.ndarray]) ->
         if isinstance(node, prim.Store):
             values[node.name] = np.asarray(inputs[node.name], dtype=np.float64)
         elif isinstance(node, prim.MapFn):
-            import jax.numpy as jnp2
-
             values[node.name] = np.asarray(prim.MAP_FNS[node.fn_name](jnp.asarray(values[node.src])))
         elif isinstance(node, prim.KeyBy):
             values[node.name] = values[node.src]

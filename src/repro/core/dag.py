@@ -55,6 +55,27 @@ class Program:
     def collect(self, name: str, src: str, sink_host: str):
         return self.add(prim.Collect(name=name, src=src, sink_host=sink_host))
 
+    # -------------------------------------------------------- rewriting --
+    @classmethod
+    def from_nodes(cls, nodes: Iterable[prim.Node]) -> "Program":
+        """Rebuild a program from an arbitrary node iterable (compiler
+        passes emit nodes in rewrite order, not necessarily dep order).
+        Validates label uniqueness, dep closure and acyclicity."""
+        p = cls()
+        for n in nodes:
+            if n.name in p.nodes:
+                raise ProgramError(f"duplicate label {n.name!r}")
+            p.nodes[n.name] = n
+        for n in p.nodes.values():
+            for d in n.deps:
+                if d not in p.nodes:
+                    raise ProgramError(f"{n.name!r} depends on undefined label {d!r}")
+        p.validate()
+        return p
+
+    def copy(self) -> "Program":
+        return Program(nodes=dict(self.nodes))
+
     # -------------------------------------------------------- structure --
     def consumers(self, label: str) -> list[str]:
         return [n.name for n in self.nodes.values() if label in n.deps]

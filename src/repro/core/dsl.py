@@ -115,7 +115,13 @@ class _Parser:
                 "items": items,
             }
         else:
-            # FN(arg, arg, ...) where args are idents / strings / ints
+            # FN(arg, arg, ...) where args are idents / strings / ints.
+            # Reduce kinds take an optional state width: SUM<64>(A, B).
+            state_width = None
+            if self.peek()[0] == "lt":
+                self.eat("lt")
+                state_width = int(self.eat("int"))
+                self.eat("gt")
             self.eat("lparen")
             args: list[Any] = []
             while self.peek()[0] != "rparen":
@@ -132,6 +138,8 @@ class _Parser:
                     self.eat("comma")  # commas are mandatory between args
             self.eat("rparen")
             node["params"] = {"args": args}
+            if state_width is not None:
+                node["params"]["state_width"] = state_width
         self.eat("semi")
         return node
 
@@ -165,7 +173,8 @@ def ast_to_program(ast: list[dict[str, Any]]) -> dag.Program:
             args = [str(a) for a in params["args"]]
             if not args:
                 raise dag.ProgramError(f"{fn.upper()}() needs at least one source")
-            p.reduce(label, *args, kind=_REDUCE_KINDS[fn])
+            p.reduce(label, *args, kind=_REDUCE_KINDS[fn],
+                     state_width=params.get("state_width", 1))
         elif fn == "map":
             args = params["args"]
             if len(args) != 2:
@@ -190,6 +199,37 @@ def ast_to_program(ast: list[dict[str, Any]]) -> dag.Program:
 def compile_source(src: str) -> dag.Program:
     """One-shot: DSL text → validated Program."""
     return ast_to_program(parse_ast(src))
+
+
+_DTYPE_UNALIASES = {v: k for k, v in _DTYPE_ALIASES.items()}
+
+
+def program_to_source(program: dag.Program) -> str:
+    """Program → DSL text (inverse of ``compile_source`` up to spelling).
+
+    The compiler's optimization passes rewrite the DAG; printing the result
+    back as surface syntax makes optimized programs inspectable and lets
+    tests assert the round trip ``compile_source(program_to_source(p))``
+    preserves structure. Nodes are emitted in topological order.
+    """
+    lines = []
+    for n in program.toposort():
+        if isinstance(n, prim.Store):
+            dtype = _DTYPE_UNALIASES.get(n.dtype, n.dtype)
+            items = f", {n.items}" if n.items else ""
+            lines.append(f'{n.name} := store<{dtype}>("{n.host}:{n.path}"{items});')
+        elif isinstance(n, prim.MapFn):
+            lines.append(f"{n.name} := MAP({n.src}, {n.fn_name});")
+        elif isinstance(n, prim.KeyBy):
+            lines.append(f"{n.name} := KEYBY({n.src}, {n.num_buckets});")
+        elif isinstance(n, prim.Reduce):
+            width = f"<{n.state_width}>" if n.state_width != 1 else ""
+            lines.append(f"{n.name} := {n.kind.value.upper()}{width}({', '.join(n.srcs)});")
+        elif isinstance(n, prim.Collect):
+            lines.append(f'{n.name} := COLLECT({n.src}, "{n.sink_host}");')
+        else:  # pragma: no cover - future node types
+            raise dag.ProgramError(f"unprintable node type {type(n).__name__}")
+    return "\n".join(lines) + "\n"
 
 
 PAPER_SOURCE = """

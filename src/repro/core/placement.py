@@ -18,12 +18,18 @@ hops). Reduce nodes are placed greedily in topological order.
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable
+from typing import Callable, Hashable, Mapping
 
 from repro.core import dag, primitives as prim
 from repro.core.topology import SwitchTopology, TorusTopology
 
 NodeId = Hashable
+
+# Candidate-scoring hook: edge_cost(src_switch, dst_switch, dep_label) → cost
+# of routing the dep's traffic between the two switches. The default is the
+# topology's (weighted) hop distance; the pass-based compiler supplies a
+# §3-derived CostModel term instead (header overhead × traffic + hop latency).
+EdgeCost = Callable[[NodeId, NodeId, str], float]
 
 
 class PlacementError(RuntimeError):
@@ -56,20 +62,29 @@ def place(
     *,
     memory_budget_bytes: int = 1 << 20,
     item_bytes: int = 8,
+    edge_cost: EdgeCost | None = None,
+    pins: Mapping[str, NodeId] | None = None,
 ) -> Placement:
-    """Greedy min-burden/min-hop placement with memory constraints.
+    """Greedy min-burden/min-cost placement with memory constraints.
 
     For each Reduce (in topo order): consider all switches, rank by
-    (added weighted hops from placed deps, current burden, switch id) and
-    take the first whose remaining state budget fits. The paper's greedy
-    'minimum burdened switch' is the burden tie-break; hop count dominates
-    because routing cost is the paper's stated objective.
+    (added cost from placed deps, current burden, switch id) and take the
+    first whose remaining state budget fits. The paper's greedy 'minimum
+    burdened switch' is the burden tie-break; routing cost dominates
+    because it is the paper's stated objective. ``edge_cost`` defaults to
+    the bare (weighted) hop distance; the pass-based compiler supplies the
+    §3 cost model instead. ``pins`` force specific labels onto specific
+    switches (combiner nodes are pinned to their store's uplink) — a
+    pinned Reduce that does not fit its switch's budget is an error.
     """
     program.validate()
+    pins = dict(pins or {})
     assignment: dict[str, NodeId] = {}
     burden: dict[NodeId, int] = {s: 0 for s in topo.switches}
     state_used: dict[NodeId, int] = {s: 0 for s in topo.switches}
     dist = getattr(topo, "weighted_distance", topo.hop_distance)
+    if edge_cost is None:
+        edge_cost = lambda a, b, _label: dist(a, b)  # noqa: E731
 
     def commit(label: str, sw: NodeId, state: int = 0) -> None:
         assignment[label] = sw
@@ -77,7 +92,16 @@ def place(
         state_used[sw] += state
 
     for node in program.toposort():
-        if isinstance(node, prim.Store):
+        if node.name in pins:
+            need = node.state_bytes(item_bytes)
+            sw = pins[node.name]
+            if state_used[sw] + need > memory_budget_bytes:
+                raise PlacementError(
+                    f"pinned node {node.name!r} needs {need}B on switch {sw!r} "
+                    f"but only {memory_budget_bytes - state_used[sw]}B remain"
+                )
+            commit(node.name, sw, state=need)
+        elif isinstance(node, prim.Store):
             commit(node.name, topo.attach_switch(node.host))
         elif isinstance(node, prim.Collect):
             sink = topo.attach_switch(node.sink_host)
@@ -87,10 +111,10 @@ def place(
             commit(node.name, assignment[node.deps[0]])
         elif isinstance(node, prim.Reduce):
             need = node.state_bytes(item_bytes)
-            dep_sw = [assignment[d] for d in node.deps]
+            dep_sw = [(assignment[d], d) for d in node.deps]
 
             def score(sw: NodeId) -> tuple[float, int, str]:
-                added = sum(dist(s, sw) for s in dep_sw)
+                added = sum(edge_cost(s, sw, d) for s, d in dep_sw)
                 return (added, burden[sw], str(sw))
 
             placed = False

@@ -118,6 +118,106 @@ def aggregate(
     raise ValueError(scenario)  # pragma: no cover
 
 
+# ---------------------------------------------------------------------------
+# Compiled-plan path: the same S1/S2/S3 structures expressed as p4mr
+# programs and lowered by the pass-based compiler. The shard_map strategies
+# above are the production fast path; these plans are the analyzable twin —
+# the packet simulator prices each scenario from the same §3 cost model the
+# placer optimizes, replacing hand-derived JCT terms with a measured plan.
+# ---------------------------------------------------------------------------
+def scenario_program(world: int, scenario: Scenario | str, *, state_width: int = 1):
+    """Gradient aggregation over ``world`` workers as a p4mr Program.
+
+    * S1_HOST       — one endpoint reduce (pinned at the sink's switch by
+                      ``compile_scenario``): all raw traffic to the host.
+    * S2_IN_NET     — left-deep chain of binary SUMs, the naive frontend
+                      output the rebalance pass restructures in-network.
+    * S3_IN_NET_MAP — S2 plus an in-transit bf16 wire map per store.
+    """
+    from repro.core import dag
+
+    scenario = Scenario(scenario)
+    if scenario not in (Scenario.S1_HOST, Scenario.S2_IN_NET, Scenario.S3_IN_NET_MAP):
+        raise ValueError(f"no DAG form for {scenario} (native/hierarchical are XLA-level)")
+    p = dag.Program()
+    leaves = []
+    for i in range(world):
+        p.store(f"g{i}", host=f"d{i}", items=state_width)
+        if scenario is Scenario.S3_IN_NET_MAP:
+            p.map(f"w{i}", f"g{i}", fn_name="to_bf16")
+            leaves.append(f"w{i}")
+        else:
+            leaves.append(f"g{i}")
+    if scenario is Scenario.S1_HOST or len(leaves) == 1:
+        p.sum("R", *leaves, state_width=state_width)
+    else:
+        acc = leaves[0]
+        for i, leaf in enumerate(leaves[1:]):
+            name = "R" if i == len(leaves) - 2 else f"r{i}"
+            p.sum(name, acc, leaf, state_width=state_width)
+            acc = name
+    out = "R"
+    if scenario is Scenario.S3_IN_NET_MAP:
+        p.map("U", "R", fn_name="from_bf16")
+        out = "U"
+    p.collect("OUT", out, sink_host="d0")
+    return p
+
+
+def compile_scenario(
+    world: int,
+    scenario: Scenario | str,
+    *,
+    state_width: int = 1,
+    topo=None,
+    cost_model=None,
+):
+    """Compile a scenario's aggregation DAG to a ``CompiledPlan``.
+
+    S1 pins the reduce to the sink's uplink and skips the optimization
+    passes (endpoint compute is the point of the baseline); S2/S3 go
+    through ``compile_best`` — on a ring the sequential chain is already
+    bandwidth-optimal, so the cost model picks chain vs rebalanced tree
+    per topology/payload rather than always rebalancing. Note the plan
+    simulator prices wire + hop latency only: the paper's S1 penalty
+    (endpoint CPU serialize/reduce rates) is out of model, so S1-vs-S2
+    crossover happens at larger worlds here than in Fig 4.
+    """
+    from repro import compiler
+    from repro.core.topology import TorusTopology
+
+    scenario = Scenario(scenario)
+    topo = topo if topo is not None else TorusTopology(dims=(world,))
+    program = scenario_program(world, scenario, state_width=state_width)
+    if scenario is Scenario.S1_HOST:
+        sink = topo.attach_switch("d0")
+        return compiler.compile(
+            program, topo, passes=compiler.UNOPTIMIZED_PASSES,
+            cost_model=cost_model, pins={"R": sink},
+        )
+    return compiler.compile_best(program, topo, cost_model=cost_model)
+
+
+def simulated_scenario_time(
+    world: int,
+    scenario: Scenario | str,
+    *,
+    state_width: int = 1,
+    topo=None,
+    cost_model=None,
+) -> float:
+    """Packet-simulator completion time of one aggregation round."""
+    import numpy as np
+
+    plan = compile_scenario(
+        world, scenario, state_width=state_width, topo=topo, cost_model=cost_model
+    )
+    inputs = {
+        f"g{i}": np.ones((state_width,), np.float64) for i in range(world)
+    }
+    return plan.simulate(inputs).report.time_s
+
+
 def wire_bytes_per_device(nbytes: float, world: int, scenario: Scenario | str) -> float:
     """Analytic wire cost (per device) of aggregating ``nbytes`` — feeds the
     scenario benchmark and the §Roofline collective term cross-check."""

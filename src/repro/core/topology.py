@@ -45,9 +45,17 @@ class SwitchTopology:
         return list(self.host_uplink)
 
     def attach_switch(self, host: str) -> NodeId:
-        if host not in self.host_uplink and host.startswith("ip_"):
-            host = host[3:]  # the paper's DSL writes hosts as "ip_h1"
-        return self.host_uplink[host]
+        # the paper's DSL writes hosts as "ip_h1"; accept both spellings
+        tried = [host]
+        if host.startswith("ip_"):
+            tried.append(host[3:])
+        for form in tried:
+            if form in self.host_uplink:
+                return self.host_uplink[form]
+        raise KeyError(
+            f"host {host!r} not attached to any switch "
+            f"(tried {' and '.join(repr(t) for t in tried)})"
+        )
 
     def neighbors(self, u: NodeId) -> tuple[NodeId, ...]:
         return self.adjacency[u]
@@ -72,6 +80,74 @@ class SwitchTopology:
         raise ValueError(f"no path {src} -> {dst}")
 
     def hop_distance(self, src: NodeId, dst: NodeId) -> int:
+        return len(self.shortest_path(src, dst)) - 1
+
+    def as_indexed(self, num_devices: int | None = None) -> "IndexedSwitchTopology":
+        """Embed the named-switch graph into a 0..n-1 integer device axis.
+
+        The JAX backend addresses devices by ``lax.axis_index``, so switch
+        ids must be mesh indices. Extra device slots (``num_devices`` larger
+        than the switch count) are pads that only size the mesh: they are
+        not placement candidates (``switches`` excludes them) and have no
+        modeled links.
+        """
+        return IndexedSwitchTopology(base=self, num_devices=num_devices or len(self.adjacency))
+
+
+@dataclasses.dataclass
+class IndexedSwitchTopology:
+    """Integer-indexed view of a ``SwitchTopology`` (see ``as_indexed``).
+
+    Switch k is ``base.switches[k]`` (insertion order); hosts keep their
+    names. Exposes the full compiler interface: ``switches``, ``hosts``,
+    ``attach_switch``, ``neighbors``, ``shortest_path``, ``hop_distance``.
+    Device ids ≥ the switch count are mesh pads: excluded from
+    ``switches`` so the placer never routes through a vertex with no
+    modeled links.
+    """
+
+    base: SwitchTopology
+    num_devices: int
+
+    def __post_init__(self):
+        names = list(self.base.adjacency)
+        if self.num_devices < len(names):
+            raise ValueError(
+                f"num_devices {self.num_devices} < switch count {len(names)}"
+            )
+        self.name_to_id = {s: i for i, s in enumerate(names)}
+        self.id_to_name = {i: s for s, i in self.name_to_id.items()}
+
+    @property
+    def switches(self) -> list[int]:
+        return list(range(len(self.base.adjacency)))
+
+    @property
+    def hosts(self) -> list[str]:
+        return self.base.hosts
+
+    def attach_switch(self, host: str) -> int:
+        return self.name_to_id[self.base.attach_switch(host)]
+
+    def neighbors(self, u: int) -> tuple[int, ...]:
+        if u not in self.id_to_name:
+            return ()
+        return tuple(self.name_to_id[v] for v in self.base.neighbors(self.id_to_name[u]))
+
+    def shortest_path(self, src: int, dst: int) -> list[int]:
+        if src == dst:
+            return [src]
+        if src not in self.id_to_name or dst not in self.id_to_name:
+            raise ValueError(
+                f"no modeled path {src} -> {dst}: pad devices "
+                f"(ids >= {len(self.id_to_name)}) have no links"
+            )
+        return [
+            self.name_to_id[s]
+            for s in self.base.shortest_path(self.id_to_name[src], self.id_to_name[dst])
+        ]
+
+    def hop_distance(self, src: int, dst: int) -> int:
         return len(self.shortest_path(src, dst)) - 1
 
 

@@ -78,3 +78,78 @@ def wordcount_reference(word_shards: list[np.ndarray], vocab: int) -> np.ndarray
         ws = ws[ws >= 0]
         np.add.at(out, ws, 1)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Word-count as a p4mr DAG, lowered by the pass-based compiler.
+# The shard_map path above is the vectorized production form; this is the
+# paper-faithful form — per-shard histogram stores feeding a reduction the
+# compiler restructures (chain → balanced tree, combiners at shared
+# uplinks) and prices with the §3 cost model.
+# ---------------------------------------------------------------------------
+def wordcount_program(
+    num_shards: int,
+    vocab: int,
+    *,
+    hosts: list[str] | None = None,
+    sink_host: str | None = None,
+):
+    """Chain-of-binary-SUMs word-count DAG (what a naive frontend emits).
+
+    Store ``s<i>`` carries shard i's (vocab,)-histogram; the left-deep
+    SUM chain is exactly the shape the rebalance pass turns into a
+    balanced in-network tree. ``hosts`` defaults to torus devices d0..dn-1.
+    """
+    from repro.core import dag
+
+    if num_shards < 1:
+        raise ValueError("need at least one shard")
+    hosts = hosts if hosts is not None else [f"d{i}" for i in range(num_shards)]
+    if len(hosts) != num_shards:
+        raise ValueError(f"{num_shards} shards but {len(hosts)} hosts")
+    p = dag.Program()
+    for i, h in enumerate(hosts):
+        p.store(f"s{i}", host=h, path=f"shard_{i}", items=vocab)
+    if num_shards == 1:
+        p.sum("COUNTS", "s0", state_width=vocab)
+    else:
+        acc = "s0"
+        for i in range(1, num_shards):
+            name = "COUNTS" if i == num_shards - 1 else f"partial{i}"
+            p.sum(name, acc, f"s{i}", state_width=vocab)
+            acc = name
+    p.collect("OUT", "COUNTS", sink_host=sink_host or hosts[-1])
+    return p
+
+
+def wordcount_via_plan(
+    word_shards: list[np.ndarray],
+    vocab: int,
+    *,
+    topo=None,
+    passes=None,
+    cost_model=None,
+):
+    """Count words through the compiler: shards → histograms → CompiledPlan
+    → packet simulator. Returns ``(counts, SimResult)``; counts are bitwise
+    what ``wordcount_reference`` produces (integer-valued sums)."""
+    from repro import compiler
+    from repro.core.topology import TorusTopology
+
+    n = len(word_shards)
+    topo = topo if topo is not None else TorusTopology(dims=(max(n, 2),))
+    program = wordcount_program(n, vocab)
+    cm = cost_model or compiler.CostModel(max_fanin=4)
+    if passes is not None:
+        plan = compiler.compile(program, topo, passes=passes, cost_model=cm)
+    else:
+        # cost model arbitrates chain (bandwidth-optimal on rings) vs
+        # rebalanced tree (latency-optimal) — see compiler.compile_best
+        plan = compiler.compile_best(program, topo, cost_model=cm)
+    inputs = {
+        f"s{i}": wordcount_reference([ws], vocab).astype(np.float64)
+        for i, ws in enumerate(word_shards)
+    }
+    sim = plan.simulate(inputs)
+    counts = sim.outputs["OUT"].astype(np.int64)
+    return counts, sim

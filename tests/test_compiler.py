@@ -1,0 +1,320 @@
+"""Pass-based compiler driver: passes, cost model, simulator, backends."""
+import random
+
+import numpy as np
+import pytest
+
+from repro import compiler
+from repro.core import codelet, dag, dsl, primitives as prim, topology, wordcount
+
+PAPER_SRC = dsl.PAPER_SOURCE + 'OUT := COLLECT(E, "h6");\n'
+
+
+def _shared_uplink_topology(n_hosts: int = 8) -> topology.SwitchTopology:
+    """Two edge switches with 4 hosts each + 2 spine switches (SwitchAgg
+    shape: many stores share one uplink)."""
+    adj = {
+        "S1": ("S3", "S4"),
+        "S2": ("S3", "S4"),
+        "S3": ("S1", "S2", "S4"),
+        "S4": ("S1", "S2", "S3"),
+    }
+    hosts = {f"w{i}": ("S1" if i < n_hosts // 2 else "S2") for i in range(n_hosts)}
+    hosts["sink"] = "S4"
+    return topology.SwitchTopology(adjacency=adj, host_uplink=hosts)
+
+
+# ---------------------------------------------------------------- driver --
+def test_compile_paper_example_produces_plan():
+    topo = topology.paper_topology()
+    plan = compiler.compile(PAPER_SRC, topo)
+    assert isinstance(plan, compiler.CompiledPlan)
+    # the D=SUM(A,B); E=SUM(C,D) chain collapses into one 3-way SUM
+    assert "D" not in plan.program.nodes
+    assert set(plan.program.nodes["E"].srcs) == {"A", "B", "C"}
+    assert [r.name for r in plan.trace] == list(compiler.DEFAULT_PASSES)
+    assert "optimized program" in plan.describe()
+
+
+def test_paper_example_simulator_cost_beats_unoptimized():
+    """Acceptance: §5.2 optimized plan costs ≤ the flat pipeline's."""
+    topo = topology.paper_topology()
+    opt = compiler.compile(PAPER_SRC, topo)
+    flat = compiler.compile(PAPER_SRC, topo, passes=compiler.UNOPTIMIZED_PASSES)
+    ins = {"A": np.array([3.0]), "B": np.array([4.0]), "C": np.array([5.0])}
+    sim_o, sim_f = opt.simulate(ins), flat.simulate(ins)
+    assert sim_o.outputs["OUT"][0] == 12.0 == sim_f.outputs["OUT"][0]
+    assert sim_o.report.time_s <= sim_f.report.time_s
+    assert opt.cost.scalar <= flat.cost.scalar
+
+
+def test_compile_accepts_program_and_ast_inputs():
+    topo = topology.paper_topology()
+    ast = dsl.parse_ast(PAPER_SRC)
+    p1 = compiler.compile(ast, topo)
+    prog = dsl.compile_source(PAPER_SRC)
+    p2 = compiler.compile(prog, topo)
+    assert p1.program.nodes.keys() == p2.program.nodes.keys()
+    with pytest.raises(TypeError):
+        compiler.compile(42, topo)
+
+
+def test_pass_manager_rejects_unknown_pass_and_accepts_custom():
+    with pytest.raises(KeyError):
+        compiler.PassManager(("parse", "no-such-pass"))
+
+    seen = []
+
+    def my_pass(ctx):
+        seen.append(len(ctx.require_program()))
+        return "custom"
+
+    plan = compiler.compile(
+        PAPER_SRC,
+        topology.paper_topology(),
+        passes=("parse", "validate", my_pass, "place", "route", "emit"),
+    )
+    assert seen == [6]
+    assert any(r.summary == "custom" for r in plan.trace)
+
+
+def test_validate_pass_rejects_unattached_host():
+    src = 'A := store<uint_64>("ip_h9:path");\nB := SUM(A);\n'
+    with pytest.raises(KeyError, match="ip_h9.*h9"):
+        compiler.compile(src, topology.paper_topology())
+
+
+def test_compile_best_never_worse_than_either_pipeline():
+    prog = wordcount.wordcount_program(8, 64)
+    topo = topology.TorusTopology(dims=(8,))
+    best = compiler.compile_best(prog, topo)
+    for passes in (compiler.DEFAULT_PASSES, compiler.UNOPTIMIZED_PASSES):
+        assert best.cost.scalar <= compiler.compile(prog, topo, passes=passes).cost.scalar
+
+
+# ----------------------------------------------------------------- passes --
+def test_dead_node_elimination():
+    p = dag.Program()
+    p.store("A", host="h1")
+    p.store("B", host="h2")
+    p.sum("LIVE", "A", "B")
+    p.map("DEAD", "A", fn_name="square")  # no collect depends on it
+    p.collect("OUT", "LIVE", sink_host="h6")
+    plan = compiler.compile(p, topology.paper_topology())
+    assert "DEAD" not in plan.program.nodes
+    assert "LIVE" in plan.program.nodes
+
+
+def test_rebalance_bounds_fanin_by_state_budget():
+    # 9 stores chained; state_width 64 → 512B per slot; budget 2KiB allows
+    # fan-in 4, so the tree must have intermediate nodes and no reduce wider
+    # than 4.
+    p = wordcount.wordcount_program(9, 64, hosts=[f"h{i % 6 + 1}" for i in range(9)])
+    cm = compiler.CostModel(switch_memory_bytes=2048, max_fanin=16)
+    plan = compiler.compile(p, topology.paper_topology(), cost_model=cm)
+    reduces = [n for n in plan.program if isinstance(n, prim.Reduce)]
+    assert all(len(r.srcs) <= 4 for r in reduces)
+    assert len(reduces) > 1  # balanced tree, not one huge fan-in
+
+
+def test_rebalance_preserves_reference_on_random_dags():
+    """Satellite: rebalancing (and the rest of the pipeline) preserves
+    ``execute_reference`` results on randomly generated DAGs."""
+    topo = topology.paper_topology()
+    width = 4
+    for seed in range(25):
+        rng = random.Random(seed)
+        p = dag.Program()
+        n_stores = rng.randint(2, 4)
+        for i in range(n_stores):
+            p.store(f"s{i}", host=f"h{i % 6 + 1}", items=width)
+        n_ops = rng.randint(2, 10)
+        for i in range(n_ops):
+            labels = [n.name for n in p if not isinstance(n, prim.Collect)]
+            roll = rng.random()
+            if roll < 0.55:
+                srcs = [rng.choice(labels) for _ in range(rng.randint(1, 3))]
+                p.sum(f"r{i}", *srcs, state_width=rng.randint(1, 8))
+            elif roll < 0.7:
+                srcs = [rng.choice(labels) for _ in range(rng.randint(1, 3))]
+                p.reduce(f"x{i}", *srcs, kind=prim.ReduceKind.MAX)
+            else:
+                p.map(f"m{i}", rng.choice(labels), fn_name=rng.choice(["square", "negate"]))
+        last = [n.name for n in p if not isinstance(n, prim.Collect)][-1]
+        p.collect("OUT", last, sink_host="h6")
+
+        inputs = {
+            f"s{i}": rng_ints(seed * 31 + i, width) for i in range(n_stores)
+        }
+        ref = codelet.execute_reference(p, inputs)
+        plan = compiler.compile(p, topo)
+        opt_ref = plan.execute_reference(inputs)
+        sim = plan.simulate(inputs)
+        np.testing.assert_array_equal(ref["OUT"], opt_ref["OUT"])
+        np.testing.assert_array_equal(ref["OUT"], sim.outputs["OUT"])
+
+
+def rng_ints(seed: int, width: int) -> np.ndarray:
+    return np.random.RandomState(seed).randint(0, 10, size=(width,)).astype(np.float64)
+
+
+def test_combiner_insertion_at_shared_uplinks():
+    topo = _shared_uplink_topology()
+    p = dag.Program()
+    for i in range(8):
+        p.store(f"s{i}", host=f"w{i}", items=4)
+    p.sum("R", *[f"s{i}" for i in range(8)], state_width=4)
+    p.collect("OUT", "R", sink_host="sink")
+    plan = compiler.compile(p, topo)
+    combiners = [n for n in plan.program.nodes if "__c" in n]
+    assert len(combiners) == 2  # one per shared edge switch
+    assert plan.pins[combiners[0]] in ("S1", "S2")
+    # partial aggregation collapses the 8 store routes to 2 spine routes
+    assert len(plan.program.nodes["R"].srcs) == 2
+    inputs = {f"s{i}": np.full((4,), float(i)) for i in range(8)}
+    sim = plan.simulate(inputs)
+    np.testing.assert_array_equal(sim.outputs["OUT"], np.full((4,), 28.0))
+
+
+def test_combiner_insertion_respects_memory_budget():
+    """Satellite: combiner insertion never exceeds the per-switch budget."""
+    topo = _shared_uplink_topology()
+    for budget in (64, 256, 1024, 4096):
+        cm = compiler.CostModel(switch_memory_bytes=budget)
+        p = dag.Program()
+        for i in range(8):
+            p.store(f"s{i}", host=f"w{i}", items=4)
+        p.sum("R", *[f"s{i}" for i in range(8)], state_width=budget // 16 or 1)
+        p.collect("OUT", "R", sink_host="sink")
+        try:
+            plan = compiler.compile(p, topo, cost_model=cm)
+        except Exception:
+            continue  # placement itself may be infeasible at tiny budgets
+        for sw, used in plan.placement.state_used.items():
+            assert used <= budget, f"switch {sw} over budget: {used} > {budget}"
+        inputs = {f"s{i}": np.ones((4,)) for i in range(8)}
+        np.testing.assert_array_equal(plan.simulate(inputs).outputs["OUT"], np.full((4,), 8.0))
+
+
+# -------------------------------------------------------------- simulator --
+def test_simulator_hop_counts_match_routing_table():
+    """Satellite: simulator hop counts equal RoutingTable totals."""
+    cases = [
+        (PAPER_SRC, topology.paper_topology(), compiler.DEFAULT_PASSES),
+        (PAPER_SRC, topology.paper_topology(), compiler.UNOPTIMIZED_PASSES),
+        (wordcount.wordcount_program(6, 16), topology.TorusTopology(dims=(6,)),
+         compiler.DEFAULT_PASSES),
+    ]
+    for src, topo, passes in cases:
+        plan = compiler.compile(src, topo, passes=passes)
+        inputs = {
+            n.name: np.ones((max(1, 16 if n.items >= 16 else 1),))
+            for n in plan.program if isinstance(n, prim.Store)
+        }
+        sim = plan.simulate(inputs)
+        assert sim.report.edge_hops == plan.routes.total_hops
+        assert sim.report.makespan_ticks >= 0
+        assert sim.report.time_s > 0
+
+
+def test_simulator_counts_recirculations_and_queueing():
+    topo = topology.paper_topology()
+    plan = compiler.compile(PAPER_SRC, topo)
+    ins = {"A": np.array([1.0]), "B": np.array([1.0]), "C": np.array([1.0])}
+    rep = plan.simulate(ins).report
+    # one 3-way reduce → 2 stateful merges
+    assert rep.recirculations == 2
+    assert rep.wire_bytes > 0
+
+
+def test_wordcount_via_plan_matches_oracle_bitwise():
+    vocab = 32
+    rs = np.random.RandomState(7)
+    shards = [rs.randint(0, vocab, size=(50,)).astype(np.int32) for _ in range(6)]
+    shards[2][-4:] = -1  # padding must be ignored
+    counts, sim = wordcount.wordcount_via_plan(shards, vocab)
+    ref = wordcount.wordcount_reference(shards, vocab)
+    np.testing.assert_array_equal(counts, ref)  # bitwise (integer sums)
+    assert sim.report.edge_hops > 0
+
+
+# --------------------------------------------------------------- backends --
+def test_jax_backend_bitwise_equals_reference_on_wordcount(multidevice):
+    """Acceptance: the optimized wordcount plan is bitwise-equal to
+    execute_reference under the JAX backend too."""
+    out = multidevice("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro import compiler
+    from repro.core import topology, wordcount
+
+    vocab = 16
+    rs = np.random.RandomState(3)
+    shards = [rs.randint(0, vocab, size=(30,)).astype(np.int32) for _ in range(8)]
+    prog = wordcount.wordcount_program(8, vocab)
+    plan = compiler.compile(prog, topology.TorusTopology(dims=(8,)))
+    hists = {f"s{i}": wordcount.wordcount_reference([ws], vocab).astype(np.float32)
+             for i, ws in enumerate(shards)}
+    ref = plan.execute_reference(hists)
+
+    step = plan.jax_step()
+    mesh = jax.make_mesh((8,), ("all",), axis_types=(jax.sharding.AxisType.Auto,))
+    big = {k: jnp.asarray(np.tile(v[None], (8, 1))) for k, v in hists.items()}
+    out = jax.shard_map(step, mesh=mesh, in_specs=P("all"), out_specs=P("all"))(big)
+    got = np.asarray(out["OUT@all"])[0]
+    np.testing.assert_array_equal(got, ref["OUT"].astype(np.float32))
+    np.testing.assert_array_equal(
+        got.astype(np.int64),
+        wordcount.wordcount_reference(shards, vocab))
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_codelet_compile_program_is_deprecated_shim():
+    from repro.core import placement as plc, routing
+
+    p = dsl.compile_source(dsl.PAPER_SOURCE)
+    p.collect("OUT", "E", sink_host="h6")
+    topo = topology.paper_topology().as_indexed()
+    pl = plc.place(p, topo)
+    rt = routing.build_routes(p, topo, pl)
+    with pytest.warns(DeprecationWarning):
+        step = codelet.compile_program(p, pl, rt)
+    assert callable(step)
+
+
+# ------------------------------------------------------------------- misc --
+def test_program_to_source_round_trips():
+    p = dsl.compile_source(dsl.PAPER_SOURCE)
+    p.collect("OUT", "E", sink_host="h6")
+    src = dsl.program_to_source(p)
+    p2 = dsl.compile_source(src)
+    assert p.nodes.keys() == p2.nodes.keys()
+    for name in p.nodes:
+        assert p.nodes[name].deps == p2.nodes[name].deps
+
+
+def test_program_to_source_round_trips_state_width():
+    p = dag.Program()
+    p.store("A", host="h1", items=8)
+    p.store("B", host="h2", items=8)
+    p.sum("R", "A", "B", state_width=64)
+    p.collect("OUT", "R", sink_host="h6")
+    src = dsl.program_to_source(p)
+    assert "SUM<64>(A, B)" in src
+    p2 = dsl.compile_source(src)
+    assert p2.nodes["R"].state_width == 64
+    assert p2.nodes["A"].items == 8
+
+
+def test_traffic_models_bf16_wire_narrowing():
+    p = dag.Program()
+    p.store("A", host="h1", items=64)
+    p.map("W", "A", fn_name="to_bf16")
+    p.sum("R", "W", state_width=64)
+    cm = compiler.CostModel()
+    t = cm.traffic(p)
+    assert t["A"].packets == 64  # 64 × 64b items, one per packet
+    assert t["W"].packets == 16  # bf16 packs 4 per 64-bit data field
+    assert t["R"].packets == 64  # state re-expands at the reducer

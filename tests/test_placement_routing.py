@@ -52,6 +52,66 @@ def test_memory_budget_forces_spill_or_fails():
         plc.place(p, t, memory_budget_bytes=100)
 
 
+def test_attach_switch_accepts_both_spellings_and_names_both_on_miss():
+    t = topo.paper_topology()
+    assert t.attach_switch("h1") == "S1"
+    assert t.attach_switch("ip_h1") == "S1"  # the paper's DSL spelling
+    with pytest.raises(KeyError) as ei:
+        t.attach_switch("ip_h9")
+    assert "ip_h9" in str(ei.value) and "'h9'" in str(ei.value)
+    with pytest.raises(KeyError) as ei:
+        t.attach_switch("h9")  # no prefix: only one form to try
+    assert "h9" in str(ei.value)
+
+
+def test_place_honors_pins_and_custom_edge_cost():
+    p, t = _paper_setup()
+    pl = plc.place(p, t, pins={"D": "S5", "E": "S5"})
+    assert pl.switch_of("D") == "S5" and pl.switch_of("E") == "S5"
+    # an edge-cost hook that makes S3 free pulls the unpinned reducers there
+    cheap_s3 = lambda a, b, _label: 0.0 if b == "S3" else 100.0  # noqa: E731
+    pl2 = plc.place(p, t, edge_cost=cheap_s3)
+    assert pl2.switch_of("D") == "S3" and pl2.switch_of("E") == "S3"
+    # a pinned reducer that cannot fit its switch budget is an error
+    p2 = dag.Program()
+    p2.store("A", host="h1")
+    p2.sum("R", "A", state_width=100)
+    with pytest.raises(plc.PlacementError):
+        plc.place(p2, t, pins={"R": "S1"}, memory_budget_bytes=100)
+
+
+def test_indexed_view_preserves_paths():
+    t = topo.paper_topology()
+    v = t.as_indexed(num_devices=8)
+    assert v.switches == list(range(6))  # pads are not placement candidates
+    assert v.attach_switch("ip_h1") == 0
+    named = t.shortest_path("S1", "S6")
+    idx = v.shortest_path(0, 5)
+    assert len(idx) == len(named)
+    assert v.hop_distance(0, 5) == t.hop_distance("S1", "S6")
+    with pytest.raises(ValueError):
+        v.shortest_path(6, 2)  # pad devices have no modeled links
+    with pytest.raises(ValueError):
+        t.as_indexed(num_devices=3)
+
+
+def test_indexed_view_placer_never_picks_pad_devices():
+    # a line fabric where a pad "wormhole" would otherwise look 1 hop away
+    line = topo.SwitchTopology(
+        adjacency={"S1": ("S2",), "S2": ("S1", "S3"), "S3": ("S2", "S4"),
+                   "S4": ("S3", "S5"), "S5": ("S4",)},
+        host_uplink={"h1": "S1", "h2": "S5"},
+    )
+    v = line.as_indexed(num_devices=8)
+    p = dag.Program()
+    p.store("A", host="h1")
+    p.store("B", host="h2")
+    p.sum("R", "A", "B")
+    p.collect("OUT", "R", sink_host="h1")
+    pl = plc.place(p, v)
+    assert all(sw < 5 for sw in pl.assignment.values())
+
+
 def test_torus_topology_geometry():
     t = topo.TorusTopology(dims=(4, 4))
     assert t.num_devices == 16
