@@ -1,0 +1,99 @@
+"""Shuffle benchmark: num_buckets × skew sweep on fat-tree and torus.
+
+For each (topology, bucket count, skew) cell the word-count shuffle
+program is compiled (lower-shuffle fan-out, cost-model bucket→switch
+assignment) and run through the packet simulator: modelled completion
+time, per-switch queueing, per-bucket wire bytes and the hottest switch's
+reducer-state residency — the quantities the bucket-count arbitration
+trades off. Writes a BENCH_shuffle.json artifact.
+
+    PYTHONPATH=src:. python benchmarks/run.py shuffle
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro import compiler, shuffle
+from repro.core import topology, wordcount
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_shuffle.json")
+
+VOCAB = 256
+N_MAPPERS = 8
+BUCKETS = (2, 4, 8, 16)
+SKEWS = (0.0, 1.0, 2.0)  # zipf-ish exponent over bucket ranks
+
+
+def _weights(num_buckets: int, skew: float) -> tuple[float, ...] | None:
+    if skew == 0.0:
+        return None
+    return tuple(1.0 / (b + 1) ** skew for b in range(num_buckets))
+
+
+def _topologies():
+    ft = topology.fat_tree_topology(4)
+    yield "fat_tree_k4", ft, [f"h{i}" for i in range(N_MAPPERS)], f"h{len(ft.hosts) - 1}"
+    torus = topology.TorusTopology(dims=(4, 4))
+    yield "torus_4x4", torus, [f"d{2 * i}" for i in range(N_MAPPERS)], "d15"
+
+
+def _case(topo_name, topo, hosts, sink, num_buckets, skew) -> dict:
+    prog = wordcount.wordcount_shuffle_program(
+        N_MAPPERS, VOCAB, num_buckets=num_buckets,
+        weights=_weights(num_buckets, skew), hosts=hosts, sink_host=sink,
+    )
+    t0 = time.perf_counter()
+    plan = compiler.compile(prog, topo)
+    compile_us = (time.perf_counter() - t0) * 1e6
+    rs = np.random.RandomState(num_buckets * 7 + int(skew * 3))
+    inputs = {
+        f"s{i}": rs.randint(0, 50, size=(VOCAB,)).astype(np.float64)
+        for i in range(N_MAPPERS)
+    }
+    sim = plan.simulate(inputs)
+    stats = shuffle.plan_shuffle(plan)
+    ref = np.sum([inputs[f"s{i}"] for i in range(N_MAPPERS)], axis=0)
+    np.testing.assert_array_equal(sim.outputs["OUT"], ref)  # shuffle is exact
+    return {
+        "topology": topo_name,
+        "num_buckets": num_buckets,
+        "skew": skew,
+        "compile_us": round(compile_us, 1),
+        "sim_time_us": round(sim.report.time_s * 1e6, 3),
+        "makespan_ticks": sim.report.makespan_ticks,
+        "queue_delay_ticks": sim.report.queue_delay_ticks,
+        "queued_switches": len(sim.report.queued_batches),
+        "wire_bytes": round(sim.report.wire_bytes, 1),
+        "bucket_wire_bytes": {str(k): round(v, 1) for k, v in stats.bucket_wire_bytes.items()},
+        "hot_bucket": stats.hot_bucket,
+        "max_switch_residency_bytes": stats.max_switch_residency_bytes,
+        "reducer_switches": len(stats.residency_by_switch),
+    }
+
+
+def run() -> list[tuple[str, float, str]]:
+    records = []
+    for topo_name, topo, hosts, sink in _topologies():
+        for b in BUCKETS:
+            for skew in SKEWS:
+                records.append(_case(topo_name, topo, hosts, sink, b, skew))
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(records, f, indent=2)
+
+    rows = []
+    for r in records:
+        rows.append((
+            f"shuffle.{r['topology']}.b{r['num_buckets']}.skew{r['skew']}",
+            r["sim_time_us"],
+            f"queue={r['queue_delay_ticks']}t hot_bucket={r['hot_bucket']} "
+            f"residency_max={r['max_switch_residency_bytes']}B "
+            f"reducers@{r['reducer_switches']}sw",
+        ))
+    rows.append(("shuffle.artifact", 0.0, f"wrote {os.path.basename(OUT_PATH)}"))
+    return rows

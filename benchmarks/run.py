@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   bench_cpu_map_reduce  — Fig 6 & 7 (measured CPU map/reduce)
   bench_scenarios       — Fig 4 & 5 (S1/S2/S3 JCT speed-ups)
   bench_compile         — pass pipeline: compile+simulate time, opt vs flat
+  bench_shuffle         — KeyBy fan-out: num_buckets × skew on fat-tree/torus
   bench_collectives     — in-transit vs endpoint aggregation (TPU form)
   bench_kernels         — Pallas kernel oracles + allclose
   bench_roofline        — §Roofline aggregation of the dry-run sweeps
@@ -22,6 +23,7 @@ from benchmarks import (
     bench_roofline,
     bench_scenarios,
     bench_serialization,
+    bench_shuffle,
 )
 
 MODULES = [
@@ -29,6 +31,7 @@ MODULES = [
     ("cpu_map_reduce", bench_cpu_map_reduce),
     ("scenarios", bench_scenarios),
     ("compile", bench_compile),
+    ("shuffle", bench_shuffle),
     ("collectives", bench_collectives),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),

@@ -5,7 +5,8 @@
     plan.simulate(inputs)     # packet-level dataplane simulator
     plan.jax_step()           # SPMD ppermute codelet for a device mesh
 
-Pipeline: parse → validate → dead-node-elim → rebalance-reduce-tree →
+Pipeline: parse → validate → dead-node-elim → lower-shuffle (KeyBy →
+per-bucket routed edges, see ``repro.shuffle``) → rebalance-reduce-tree →
 insert-combiners → place (§3 cost model) → route → emit. Every stage is a
 registered pass over a shared ``CompileCtx``; see ``driver.py``.
 """

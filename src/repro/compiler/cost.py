@@ -107,7 +107,17 @@ class CostModel:
                 up = out[n.deps[0]]
                 items = up.items
                 bits = _MAP_WIRE_BITS.get(n.fn_name, up.wire_bits_per_item)
-            else:  # KeyBy / Collect preserve the upstream footprint
+            elif isinstance(n, prim.ShuffleBucket):
+                # after a real shuffle the footprint splits across buckets:
+                # each bucket edge carries only its key-space slice
+                up = out[n.deps[0]]
+                items = max(1, n.width)
+                bits = up.wire_bits_per_item
+            elif isinstance(n, prim.Concat):
+                parts = [out[s] for s in n.deps]
+                items = sum(t.items for t in parts)
+                bits = max(t.wire_bits_per_item for t in parts)
+            else:  # unlowered KeyBy / Collect preserve the upstream footprint
                 up = out[n.deps[0]]
                 items, bits = up.items, up.wire_bits_per_item
             packets = max(1, -(-items * bits // data_bits))  # ceil division

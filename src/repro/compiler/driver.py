@@ -61,9 +61,11 @@ def registered_passes() -> list[str]:
 
 
 def _ensure_builtin_passes() -> None:
-    # passes.py imports this module for register_pass, so load it lazily
+    # pass modules import this module for register_pass, so load them lazily
     if "parse" not in _PASS_REGISTRY:
         import repro.compiler.passes  # noqa: F401
+    if "lower-shuffle" not in _PASS_REGISTRY:
+        import repro.shuffle.lower  # noqa: F401
 
 
 # The full optimizing pipeline and the paper-faithful flat baseline.
@@ -71,6 +73,7 @@ DEFAULT_PASSES: tuple[str, ...] = (
     "parse",
     "validate",
     "dead-node-elim",
+    "lower-shuffle",
     "rebalance-reduce-tree",
     "insert-combiners",
     "place",

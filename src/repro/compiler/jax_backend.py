@@ -73,10 +73,28 @@ def emit_step(
                 v = _route_value(values[node.src], axis_name, route_of[(node.src, node.name)])
                 values[node.name] = prim.MAP_FNS[node.fn_name](v)
             elif isinstance(node, prim.KeyBy):
-                # functional path: keep the value; bucketing is realized by
-                # the shuffle in wordcount.py (all_to_all), not hop routing.
+                # unlowered KeyBy: pass-through. Compile with the
+                # lower-shuffle pass (DEFAULT_PASSES) to get per-bucket
+                # ShuffleBucket edges routed below; the fused-collective
+                # equivalent is repro.shuffle.spmd (all_to_all).
                 values[node.name] = _route_value(
                     values[node.src], axis_name, route_of[(node.src, node.name)]
+                )
+            elif isinstance(node, prim.ShuffleBucket):
+                # per-bucket fan-out edge: slice this bucket's key-space
+                # window out of the mapper's value (last axis — values may
+                # carry a leading shard dim under shard_map); the
+                # bucket→reducer hop sequence is routed like any other edge
+                v = _route_value(values[node.src], axis_name, route_of[(node.src, node.name)])
+                values[node.name] = v[..., node.offset : node.offset + node.width]
+            elif isinstance(node, prim.Concat):
+                # shuffle collection: reassemble per-bucket reducer states
+                values[node.name] = jnp.concatenate(
+                    [
+                        _route_value(values[s], axis_name, route_of[(s, node.name)])
+                        for s in node.srcs
+                    ],
+                    axis=-1,
                 )
             elif isinstance(node, prim.Reduce):
                 acc = None

@@ -205,7 +205,7 @@ def _ingress_switch(ctx: CompileCtx, p: dag.Program, label: str) -> NodeId | Non
         return ctx.pins[label]
     if isinstance(node, prim.Store):
         return ctx.topology.attach_switch(node.host)
-    if isinstance(node, (prim.MapFn, prim.KeyBy)):
+    if isinstance(node, (prim.MapFn, prim.KeyBy, prim.ShuffleBucket)):
         return _ingress_switch(ctx, p, node.deps[0])
     return None
 

@@ -13,6 +13,10 @@ simple and deterministic:
 * a Reduce merging k upstream batches holds state on its switch and
   **recirculates** the stored partial once per additional source
   (k−1 recirculations), the §3 stateful-processing penalty;
+* a lowered shuffle's ``ShuffleBucket`` edges each carry only their
+  bucket's slice of the traffic (skewed histograms → hot buckets put more
+  packets on the wire, and converging bucket edges contend in the
+  destination switch's queue);
 * numeric payloads are carried along, so simulator outputs are the same
   values ``codelet.execute_reference`` produces — functional equivalence
   and timing come from one run.
@@ -107,8 +111,21 @@ class SimulatorBackend:
                 )
                 ready[node.name] = t
             elif isinstance(node, prim.KeyBy):
+                # unlowered pass-through; compile with the lower-shuffle pass
+                # to carry per-bucket traffic instead
                 values[node.name] = values[node.src]
                 ready[node.name] = forward(node.src, node.name)
+            elif isinstance(node, prim.ShuffleBucket):
+                # the bucket rides its mapper's switch (usually a 0-hop
+                # edge); the per-bucket traffic travels on the outgoing
+                # bucket→reducer edges, priced by this label's slice width
+                t = forward(node.src, node.name)
+                values[node.name] = values[node.src][..., node.offset : node.offset + node.width]
+                ready[node.name] = t
+            elif isinstance(node, prim.Concat):
+                arrivals = [forward(s, node.name) for s in node.srcs]
+                values[node.name] = np.concatenate([values[s] for s in node.srcs], axis=-1)
+                ready[node.name] = max(arrivals)
             elif isinstance(node, prim.Reduce):
                 arrivals = []
                 acc = None

@@ -24,12 +24,19 @@ from repro.core.scenarios import (
     simulated_scenario_time,
     wire_bytes_per_device,
 )
-from repro.core.topology import SwitchTopology, TorusTopology, paper_topology, production_torus
+from repro.core.topology import (
+    SwitchTopology,
+    TorusTopology,
+    fat_tree_topology,
+    paper_topology,
+    production_torus,
+)
 from repro.core.wordcount import (
     local_histogram,
     wordcount_host_baseline,
     wordcount_program,
     wordcount_reference,
+    wordcount_shuffle_program,
     wordcount_step,
     wordcount_via_plan,
 )
@@ -43,7 +50,9 @@ __all__ = [
     "RoutingTable", "build_routes",
     "Scenario", "aggregate", "compile_scenario", "scenario_program",
     "simulated_scenario_time", "wire_bytes_per_device",
-    "SwitchTopology", "TorusTopology", "paper_topology", "production_torus",
+    "SwitchTopology", "TorusTopology", "fat_tree_topology", "paper_topology",
+    "production_torus",
     "local_histogram", "wordcount_host_baseline", "wordcount_program",
-    "wordcount_reference", "wordcount_step", "wordcount_via_plan",
+    "wordcount_reference", "wordcount_shuffle_program", "wordcount_step",
+    "wordcount_via_plan",
 ]

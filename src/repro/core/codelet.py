@@ -55,6 +55,10 @@ def execute_reference(program: dag.Program, inputs: Mapping[str, np.ndarray]) ->
             values[node.name] = np.asarray(prim.MAP_FNS[node.fn_name](jnp.asarray(values[node.src])))
         elif isinstance(node, prim.KeyBy):
             values[node.name] = values[node.src]
+        elif isinstance(node, prim.ShuffleBucket):
+            values[node.name] = values[node.src][..., node.offset : node.offset + node.width]
+        elif isinstance(node, prim.Concat):
+            values[node.name] = np.concatenate([values[s] for s in node.srcs], axis=-1)
         elif isinstance(node, prim.Reduce):
             acc = values[node.srcs[0]].astype(np.float64)
             for s in node.srcs[1:]:

@@ -39,10 +39,30 @@ class Program:
             raise ProgramError(f"unknown map fn {fn_name!r}")
         return self.add(prim.MapFn(name=name, src=src, fn_name=fn_name))
 
-    def key_by(self, name: str, src: str, num_buckets: int):
+    def key_by(self, name: str, src: str, num_buckets: int, weights=None):
         if num_buckets < 1:
             raise ProgramError("num_buckets must be >= 1")
-        return self.add(prim.KeyBy(name=name, src=src, num_buckets=num_buckets))
+        return self.add(
+            prim.KeyBy(
+                name=name, src=src, num_buckets=num_buckets,
+                weights=tuple(weights) if weights is not None else None,
+            )
+        )
+
+    def bucket(self, name: str, src: str, bucket: int, num_buckets: int, offset: int, width: int):
+        if not 0 <= bucket < num_buckets:
+            raise ProgramError(f"bucket {bucket} out of range [0, {num_buckets})")
+        return self.add(
+            prim.ShuffleBucket(
+                name=name, src=src, bucket=bucket, num_buckets=num_buckets,
+                offset=offset, width=width,
+            )
+        )
+
+    def concat(self, name: str, *srcs: str):
+        if not srcs:
+            raise ProgramError(f"concat {name!r} needs at least one source")
+        return self.add(prim.Concat(name=name, srcs=tuple(srcs)))
 
     def sum(self, name: str, *srcs: str, state_width: int = 1):
         return self.add(

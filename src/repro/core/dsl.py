@@ -14,6 +14,33 @@ same two stages with a hand-written lexer + recursive-descent parser:
 matching the paper's description), ``ast_to_program`` builds the
 ``dag.Program``. Extensions beyond the paper's grammar (MAP/KEYBY/COLLECT,
 more dtypes, more reduce kinds) use the same call syntax.
+
+KEYBY end to end (the in-network shuffle)
+-----------------------------------------
+``K := KEYBY(S, B);`` declares the paper's mapper→reducer hash routing:
+S's items are bucketed into B key-space slices (bucket = key // slice
+width, order-preserving; per-bucket skew weights are settable via the
+``Program.key_by`` API). The surface form is just the annotation — the
+realization happens downstream:
+
+1. **parse**   — KEYBY becomes a ``primitives.KeyBy`` node (this module).
+2. **lower**   — the compiler's ``lower-shuffle`` pass expands every
+   KEYBY-fed reduce into per-bucket ``BUCKET`` edges (``ShuffleBucket``)
+   and per-bucket reducers, pinned to switches the §3 CostModel picks
+   under per-switch memory budgets; the reduce's label survives as a
+   ``CONCAT`` reassembling bucket order (see ``repro.shuffle.lower``).
+3. **route**   — each bucket edge is routed individually
+   (``core.routing.build_routes``, queue-aware ECMP tie-breaking), so the
+   shuffle's fan-out is visible in ``CompiledPlan.routes``, the packet
+   simulator's per-switch queues, and ``shuffle.plan_shuffle`` stats.
+4. **execute** — the JAX backend ships each bucket over its ``ppermute``
+   hop sequence; the fused device-mesh equivalent is one capacity-sized
+   ``all_to_all`` built on the Pallas ``hash_partition`` mapper
+   (``repro.shuffle.spmd``), which word-count's production path uses.
+
+``BUCKET(src, bucket, num_buckets, offset, width)`` and
+``CONCAT(srcs...)`` exist in the surface syntax so optimized (lowered)
+programs still print and re-parse via ``program_to_source``.
 """
 from __future__ import annotations
 
@@ -185,6 +212,19 @@ def ast_to_program(ast: list[dict[str, Any]]) -> dag.Program:
             if len(args) != 2:
                 raise dag.ProgramError("KEYBY(src, num_buckets) takes exactly 2 args")
             p.key_by(label, str(args[0]), num_buckets=int(args[1]))
+        elif fn == "bucket":
+            args = params["args"]
+            if len(args) != 5:
+                raise dag.ProgramError(
+                    "BUCKET(src, bucket, num_buckets, offset, width) takes exactly 5 args"
+                )
+            p.bucket(label, str(args[0]), bucket=int(args[1]), num_buckets=int(args[2]),
+                     offset=int(args[3]), width=int(args[4]))
+        elif fn == "concat":
+            args = [str(a) for a in params["args"]]
+            if not args:
+                raise dag.ProgramError("CONCAT() needs at least one source")
+            p.concat(label, *args)
         elif fn == "collect":
             args = params["args"]
             if len(args) != 2:
@@ -221,7 +261,16 @@ def program_to_source(program: dag.Program) -> str:
         elif isinstance(n, prim.MapFn):
             lines.append(f"{n.name} := MAP({n.src}, {n.fn_name});")
         elif isinstance(n, prim.KeyBy):
+            # declared skew weights are API-only (floats have no surface
+            # syntax); the bucket count round-trips
             lines.append(f"{n.name} := KEYBY({n.src}, {n.num_buckets});")
+        elif isinstance(n, prim.ShuffleBucket):
+            lines.append(
+                f"{n.name} := BUCKET({n.src}, {n.bucket}, {n.num_buckets}, "
+                f"{n.offset}, {n.width});"
+            )
+        elif isinstance(n, prim.Concat):
+            lines.append(f"{n.name} := CONCAT({', '.join(n.srcs)});")
         elif isinstance(n, prim.Reduce):
             width = f"<{n.state_width}>" if n.state_width != 1 else ""
             lines.append(f"{n.name} := {n.kind.value.upper()}{width}({', '.join(n.srcs)});")

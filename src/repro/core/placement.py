@@ -106,8 +106,10 @@ def place(
         elif isinstance(node, prim.Collect):
             sink = topo.attach_switch(node.sink_host)
             commit(node.name, sink)
-        elif isinstance(node, (prim.MapFn, prim.KeyBy)):
-            # stateless per-packet: ride with the upstream switch
+        elif isinstance(node, (prim.MapFn, prim.KeyBy, prim.ShuffleBucket, prim.Concat)):
+            # stateless per-packet: ride with the (first) upstream switch.
+            # The lower-shuffle pass pins Concat nodes to the collect sink
+            # when it can, so this fallback rarely fires for Concat.
             commit(node.name, assignment[node.deps[0]])
         elif isinstance(node, prim.Reduce):
             need = node.state_bytes(item_bytes)

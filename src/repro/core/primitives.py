@@ -141,15 +141,70 @@ class KeyBy(Node):
     """Hash-route items to one of ``num_buckets`` reducers (mapper→reducer).
 
     This is the paper's hash-based forwarding from mappers to reducers and,
-    on TPU, the ``all_to_all`` shuffle key.
+    on TPU, the ``all_to_all`` shuffle key. The compiler's ``lower-shuffle``
+    pass expands a KeyBy-fed reduce into per-bucket ``ShuffleBucket`` edges
+    and per-bucket reducers, so the fan-out becomes compiler-visible routed
+    traffic instead of a pass-through annotation.
+
+    ``weights`` optionally declares the expected per-bucket traffic shares
+    (a skew histogram, relative — need not sum to 1). The lowering sizes
+    each bucket's slice of the key space proportionally, so a hot bucket
+    carries more wire items and larger reducer state.
     """
 
     src: str = ""
     num_buckets: int = 1
+    weights: tuple[float, ...] | None = None
+
+    def __post_init__(self):
+        if self.weights is not None:
+            if len(self.weights) != self.num_buckets:
+                raise ValueError(
+                    f"keyby {self.name!r}: {len(self.weights)} weights for "
+                    f"{self.num_buckets} buckets"
+                )
+            if any(w < 0 for w in self.weights) or sum(self.weights) <= 0:
+                raise ValueError(f"keyby {self.name!r}: weights must be >=0 with a positive sum")
 
     @property
     def deps(self) -> tuple[str, ...]:
         return (self.src,)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShuffleBucket(Node):
+    """One bucket of a lowered KeyBy: the slice of ``src``'s key space that
+    hash-routes to bucket ``bucket`` (``lower-shuffle`` pass output).
+
+    The bucketing "hash" is the order-preserving range partition the word
+    count shuffle uses (bucket = key // bucket_width): the node carries
+    ``src[offset : offset + width]``, so concatenating a KeyBy's buckets
+    reconstructs the upstream exactly. Stateless per-packet filter — it
+    rides on the upstream's switch; the per-bucket routed edge is the edge
+    from this node to its (per-bucket) reducer.
+    """
+
+    src: str = ""
+    bucket: int = 0
+    num_buckets: int = 1
+    offset: int = 0
+    width: int = 1
+
+    @property
+    def deps(self) -> tuple[str, ...]:
+        return (self.src,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Concat(Node):
+    """Reassemble per-bucket reducer outputs in bucket order (shuffle
+    collection phase). Stateless; output = concatenation of ``srcs``."""
+
+    srcs: tuple[str, ...] = ()
+
+    @property
+    def deps(self) -> tuple[str, ...]:
+        return tuple(self.srcs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,4 +277,4 @@ def register_map_fn(name: str, fn: Callable[[Any], Any]) -> None:
     dict.__setitem__(MAP_FNS, name, fn)  # type: ignore[attr-defined]
 
 
-NODE_TYPES = (Store, MapFn, KeyBy, Reduce, Collect)
+NODE_TYPES = (Store, MapFn, KeyBy, ShuffleBucket, Concat, Reduce, Collect)

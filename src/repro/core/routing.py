@@ -61,12 +61,82 @@ class RoutingTable:
         return rules
 
 
+def _dist_to(topo, dst: NodeId) -> dict[NodeId, int]:
+    """Hop distance of every reachable switch to ``dst`` — one BFS over the
+    undirected switch graph (shared by all edges targeting ``dst``, instead
+    of re-running shortest-path per candidate neighbor)."""
+    from collections import deque
+
+    dist = {dst: 0}
+    q = deque([dst])
+    while q:
+        u = q.popleft()
+        for v in topo.neighbors(u):
+            if v not in dist:
+                dist[v] = dist[u] + 1
+                q.append(v)
+    return dist
+
+
+def _load_aware_shortest_path(
+    topo,
+    src: NodeId,
+    dst: NodeId,
+    dist: dict[NodeId, int],
+    link_load: dict[tuple[NodeId, NodeId], int],
+) -> list[NodeId]:
+    """Shortest path that breaks equal-cost ties by current link load.
+
+    BFS distance admits many minimal paths (ECMP); the classic fixed choice
+    sends every route between one switch pair down the same links. Instead
+    pick each next hop greedily among the distance-decreasing neighbors,
+    preferring the least-loaded outgoing link (then the smallest switch id,
+    for determinism) — so two batches between the same endpoints spread
+    over distinct equal-cost paths and contend less in the simulator.
+    """
+    if src == dst:
+        return [src]
+    path = [src]
+    cur = src
+    remaining = dist.get(src)
+    if remaining is None:  # disconnected under neighbors — fixed fallback
+        return list(topo.shortest_path(src, dst))
+    while cur != dst:
+        best = None
+        for v in topo.neighbors(cur):
+            if dist.get(v) != remaining - 1:
+                continue
+            key = (link_load.get((cur, v), 0), str(v))
+            if best is None or key < best[0]:
+                best = (key, v)
+        if best is None:  # inconsistent metric — fall back to the fixed path
+            return list(topo.shortest_path(src, dst))
+        cur = best[1]
+        path.append(cur)
+        remaining -= 1
+    return path
+
+
 def build_routes(program: dag.Program, topo, placement: Placement) -> RoutingTable:
     routes = []
+    # per-link batch counts accumulated while routing: later edges avoid
+    # links earlier equal-cost edges already claimed (queue-aware ECMP)
+    link_load: dict[tuple[NodeId, NodeId], int] = {}
+    dist_maps: dict[NodeId, dict[NodeId, int]] = {}  # one BFS per destination
+    load_aware = hasattr(topo, "neighbors")
     for node in program:
         for d in node.deps:
             src_sw = placement.switch_of(d)
             dst_sw = placement.switch_of(node.name)
-            path = tuple(topo.shortest_path(src_sw, dst_sw))
+            if load_aware:
+                if dst_sw not in dist_maps:
+                    dist_maps[dst_sw] = _dist_to(topo, dst_sw)
+                path = tuple(
+                    _load_aware_shortest_path(topo, src_sw, dst_sw, dist_maps[dst_sw], link_load)
+                )
+            else:
+                path = tuple(topo.shortest_path(src_sw, dst_sw))
+            for a, b in zip(path, path[1:]):
+                link_load[(a, b)] = link_load.get((a, b), 0) + 1
             routes.append(Route(src_label=d, dst_label=node.name, path=path))
     return RoutingTable(routes=routes)

@@ -125,14 +125,27 @@ def aggregate(
 # the packet simulator prices each scenario from the same §3 cost model the
 # placer optimizes, replacing hand-derived JCT terms with a measured plan.
 # ---------------------------------------------------------------------------
-def scenario_program(world: int, scenario: Scenario | str, *, state_width: int = 1):
+def scenario_program(
+    world: int,
+    scenario: Scenario | str,
+    *,
+    state_width: int = 1,
+    shuffle_buckets: int | None = None,
+):
     """Gradient aggregation over ``world`` workers as a p4mr Program.
 
     * S1_HOST       — one endpoint reduce (pinned at the sink's switch by
                       ``compile_scenario``): all raw traffic to the host.
-    * S2_IN_NET     — left-deep chain of binary SUMs, the naive frontend
-                      output the rebalance pass restructures in-network.
-    * S3_IN_NET_MAP — S2 plus an in-transit bf16 wire map per store.
+    * S2_IN_NET     — in-network reduce. Chain form (``shuffle_buckets
+                      =None``): left-deep binary SUMs, the naive frontend
+                      output the rebalance pass restructures. Shuffle form
+                      (``shuffle_buckets=B``): every worker KEYBYs its
+                      gradient into B buckets and one SUM reduces them —
+                      the ``lower-shuffle`` pass turns that into B pinned
+                      per-bucket reducers, i.e. an in-network
+                      reduce-scatter with a gather at the sink.
+    * S3_IN_NET_MAP — S2 plus an in-transit bf16 wire map per store (the
+                      bucket edges inherit the narrowed wire format).
     """
     from repro.core import dag
 
@@ -148,7 +161,14 @@ def scenario_program(world: int, scenario: Scenario | str, *, state_width: int =
             leaves.append(f"w{i}")
         else:
             leaves.append(f"g{i}")
-    if scenario is Scenario.S1_HOST or len(leaves) == 1:
+    if shuffle_buckets is not None:
+        buckets = max(1, min(shuffle_buckets, state_width))
+        keybys = []
+        for i, leaf in enumerate(leaves):
+            p.key_by(f"k{i}", leaf, num_buckets=buckets)
+            keybys.append(f"k{i}")
+        p.sum("R", *keybys, state_width=state_width)
+    elif scenario is Scenario.S1_HOST or len(leaves) == 1:
         p.sum("R", *leaves, state_width=state_width)
     else:
         acc = leaves[0]
@@ -174,28 +194,42 @@ def compile_scenario(
 ):
     """Compile a scenario's aggregation DAG to a ``CompiledPlan``.
 
-    S1 pins the reduce to the sink's uplink and skips the optimization
-    passes (endpoint compute is the point of the baseline); S2/S3 go
-    through ``compile_best`` — on a ring the sequential chain is already
-    bandwidth-optimal, so the cost model picks chain vs rebalanced tree
-    per topology/payload rather than always rebalancing. Note the plan
-    simulator prices wire + hop latency only: the paper's S1 penalty
-    (endpoint CPU serialize/reduce rates) is out of model, so S1-vs-S2
-    crossover happens at larger worlds here than in Fig 4.
+    S1 expresses its fan-in through the shuffle subsystem too (a single
+    KEYBY bucket whose reducer is pinned to the sink's uplink — endpoint
+    compute stays the point of the baseline, no optimization passes).
+    S2/S3 let the §3 cost model arbitrate between the chain form (via
+    ``compile_best``: chain vs rebalanced tree) and the compiled-shuffle
+    form at several bucket counts (``shuffle.arbitrate_buckets``) — the
+    same move, applied to the fan-out degree. Note the plan simulator
+    prices wire + hop latency only: the paper's S1 penalty (endpoint CPU
+    serialize/reduce rates) is out of model, so S1-vs-S2 crossover
+    happens at larger worlds here than in Fig 4.
     """
-    from repro import compiler
+    from repro import compiler, shuffle
     from repro.core.topology import TorusTopology
 
     scenario = Scenario(scenario)
     topo = topo if topo is not None else TorusTopology(dims=(world,))
-    program = scenario_program(world, scenario, state_width=state_width)
     if scenario is Scenario.S1_HOST:
         sink = topo.attach_switch("d0")
+        program = scenario_program(world, scenario, state_width=state_width, shuffle_buckets=1)
         return compiler.compile(
-            program, topo, passes=compiler.UNOPTIMIZED_PASSES,
+            program, topo,
+            passes=("parse", "validate", "lower-shuffle", "place", "route", "emit"),
             cost_model=cost_model, pins={"R": sink},
         )
-    return compiler.compile_best(program, topo, cost_model=cost_model)
+    chain = compiler.compile_best(
+        scenario_program(world, scenario, state_width=state_width),
+        topo, cost_model=cost_model,
+    )
+    # clamp to the key space before dedup: tiny state_width collapses the
+    # candidates, so we don't compile the same 1-bucket program twice
+    candidates = sorted({max(1, min(b, state_width)) for b in (world // 2, world)})
+    shuffled = shuffle.arbitrate_buckets(
+        lambda b: scenario_program(world, scenario, state_width=state_width, shuffle_buckets=b),
+        topo, candidates, cost_model=cost_model,
+    )
+    return min((chain, shuffled), key=lambda pl: pl.cost.scalar)
 
 
 def simulated_scenario_time(

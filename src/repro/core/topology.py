@@ -169,6 +169,47 @@ def paper_topology() -> SwitchTopology:
     return SwitchTopology(adjacency=adj, host_uplink=hosts)
 
 
+def fat_tree_topology(k: int = 4) -> SwitchTopology:
+    """k-ary fat-tree (Al-Fares et al.): k pods of k/2 edge + k/2 aggregation
+    switches, (k/2)² core switches, (k/2)² hosts per pod.
+
+    The canonical datacenter shuffle fabric: many equal-cost paths between
+    pods, so this is where queue-aware ECMP tie-breaking and bucket→switch
+    assignment actually have room to spread load. Hosts are ``h<i>``,
+    attached (k/2 each) to the edge switches. ``k`` must be even.
+    """
+    if k < 2 or k % 2:
+        raise ValueError(f"fat-tree arity must be even and >= 2, got {k}")
+    half = k // 2
+    adj: dict[NodeId, set[NodeId]] = {}
+
+    def link(a: NodeId, b: NodeId) -> None:
+        adj.setdefault(a, set()).add(b)
+        adj.setdefault(b, set()).add(a)
+
+    for pod in range(k):
+        for e in range(half):
+            for a in range(half):
+                link(f"E{pod}_{e}", f"A{pod}_{a}")
+    # core switch C<a>_<c> connects to aggregation switch a of every pod
+    for a in range(half):
+        for c in range(half):
+            for pod in range(k):
+                link(f"C{a}_{c}", f"A{pod}_{a}")
+
+    hosts: dict[str, NodeId] = {}
+    h = 0
+    for pod in range(k):
+        for e in range(half):
+            for _ in range(half):
+                hosts[f"h{h}"] = f"E{pod}_{e}"
+                h += 1
+    return SwitchTopology(
+        adjacency={sw: tuple(sorted(nbrs)) for sw, nbrs in sorted(adj.items())},
+        host_uplink=hosts,
+    )
+
+
 @dataclasses.dataclass
 class TorusTopology:
     """N-D wrap-around torus of devices; vertex ids are flat ints.

@@ -1,8 +1,10 @@
 """Word-Count on a device mesh (§2, Fig 1) — the paper's running example.
 
 Map: each device ("server"/"mapper") histograms its local word list.
-Shuffle: counts are hash-routed to reducers — on TPU the mapper→reducer
-routing is one ``all_to_all`` over the device axis (bucket = word bucket).
+Shuffle: counts are hash-routed to reducers by the shuffle subsystem
+(``repro.shuffle``): on a device mesh one ``all_to_all`` over the axis
+(``shuffle.spmd.shuffle_reduce``), in the compiler a KEYBY node the
+``lower-shuffle`` pass expands into per-bucket routed edges.
 Reduce: each device ("reducer") sums the partial counts it received —
 performed as part of the shuffle's arrival processing, i.e. in transit.
 
@@ -15,7 +17,7 @@ fallback/oracle.
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,16 +45,16 @@ def wordcount_step(
 
     Runs inside shard_map over ``axis_name``. Device k ends up owning the
     final counts of words [k·vocab/p, (k+1)·vocab/p) — data has been
-    reduced *while being shuffled* (single all_to_all + local add), the
-    S2/S3 path of the paper. Requires vocab % p == 0 (pad upstream).
+    reduced *while being shuffled* (the S2/S3 path of the paper). The
+    shuffle itself is the shared subsystem primitive
+    ``repro.shuffle.spmd.shuffle_reduce`` (all_to_all + arrival sum), the
+    same KEYBY semantics the compiler lowers to routed bucket edges.
+    Requires vocab % p == 0 (pad upstream).
     """
-    p = lax.axis_size(axis_name)
-    if vocab % p:
-        raise ValueError(f"vocab {vocab} not divisible by world {p}")
+    from repro.shuffle.spmd import shuffle_reduce
+
     hist = (histogram_fn or local_histogram)(words, vocab)  # map
-    buckets = hist.reshape(p, vocab // p)  # keyby: bucket = word // (vocab/p)
-    arrived = lax.all_to_all(buckets, axis_name, split_axis=0, concat_axis=0, tiled=False)
-    return arrived.sum(axis=0)  # reduce at arrival
+    return shuffle_reduce(hist, axis_name)  # keyby + reduce in transit
 
 
 def wordcount_host_baseline(
@@ -122,6 +124,43 @@ def wordcount_program(
     return p
 
 
+def wordcount_shuffle_program(
+    num_shards: int,
+    vocab: int,
+    *,
+    num_buckets: int | None = None,
+    weights: Sequence[float] | None = None,
+    hosts: list[str] | None = None,
+    sink_host: str | None = None,
+):
+    """Word-count as the paper's real Map-Reduce shape: MAP→KEYBY→REDUCE.
+
+    Store ``s<i>`` carries shard i's (vocab,)-histogram, ``k<i>`` declares
+    the mapper→reducer hash routing (``weights`` = per-bucket skew), and
+    the single SUM is the reducer the ``lower-shuffle`` pass splits into
+    per-bucket in-network reducers. This is what ``wordcount_via_plan``
+    compiles; ``wordcount_program`` keeps the naive chain form the
+    rebalance pass exists for.
+    """
+    from repro.core import dag
+
+    if num_shards < 1:
+        raise ValueError("need at least one shard")
+    hosts = hosts if hosts is not None else [f"d{i}" for i in range(num_shards)]
+    if len(hosts) != num_shards:
+        raise ValueError(f"{num_shards} shards but {len(hosts)} hosts")
+    buckets = num_buckets if num_buckets is not None else min(num_shards, vocab)
+    p = dag.Program()
+    keybys = []
+    for i, h in enumerate(hosts):
+        p.store(f"s{i}", host=h, path=f"shard_{i}", items=vocab)
+        p.key_by(f"k{i}", f"s{i}", num_buckets=buckets, weights=weights)
+        keybys.append(f"k{i}")
+    p.sum("COUNTS", *keybys, state_width=vocab)
+    p.collect("OUT", "COUNTS", sink_host=sink_host or hosts[-1])
+    return p
+
+
 def wordcount_via_plan(
     word_shards: list[np.ndarray],
     vocab: int,
@@ -129,23 +168,43 @@ def wordcount_via_plan(
     topo=None,
     passes=None,
     cost_model=None,
+    num_buckets: int | None = None,
+    weights: Sequence[float] | None = None,
 ):
-    """Count words through the compiler: shards → histograms → CompiledPlan
-    → packet simulator. Returns ``(counts, SimResult)``; counts are bitwise
-    what ``wordcount_reference`` produces (integer-valued sums)."""
-    from repro import compiler
+    """Count words through the compiler: shards → histograms → MAP→KEYBY→
+    REDUCE program → ``lower-shuffle`` → packet simulator. Returns
+    ``(counts, SimResult)``; counts are bitwise what
+    ``wordcount_reference`` (and the ``wordcount_step`` device-mesh path)
+    produces — integer-valued sums, reassembled in bucket order.
+
+    ``num_buckets=None`` lets the §3 cost model arbitrate the fan-out the
+    same way ``compile_best`` arbitrates chain-vs-tree
+    (``shuffle.arbitrate_buckets`` over 1 / p/2 / p buckets).
+    """
+    from repro import compiler, shuffle
     from repro.core.topology import TorusTopology
 
     n = len(word_shards)
     topo = topo if topo is not None else TorusTopology(dims=(max(n, 2),))
-    program = wordcount_program(n, vocab)
     cm = cost_model or compiler.CostModel(max_fanin=4)
-    if passes is not None:
-        plan = compiler.compile(program, topo, passes=passes, cost_model=cm)
+
+    def make(b: int):
+        # re-bin declared skew to the candidate bucket count (weights are a
+        # density over the key space, not tied to one bucket granularity)
+        w = shuffle.resample_weights(weights, b) if weights is not None else None
+        return wordcount_shuffle_program(n, vocab, num_buckets=b, weights=w)
+
+    if num_buckets is not None:
+        b = min(num_buckets, vocab)
+        if passes is not None:
+            plan = compiler.compile(make(b), topo, passes=passes, cost_model=cm)
+        else:
+            plan = compiler.compile(make(b), topo, cost_model=cm)
     else:
-        # cost model arbitrates chain (bandwidth-optimal on rings) vs
-        # rebalanced tree (latency-optimal) — see compiler.compile_best
-        plan = compiler.compile_best(program, topo, cost_model=cm)
+        candidates = sorted({1, max(1, n // 2), min(n, vocab)})
+        plan = shuffle.arbitrate_buckets(
+            make, topo, candidates, cost_model=cm, passes=passes
+        )
     inputs = {
         f"s{i}": wordcount_reference([ws], vocab).astype(np.float64)
         for i, ws in enumerate(word_shards)

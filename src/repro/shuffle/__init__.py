@@ -1,0 +1,39 @@
+"""repro.shuffle — the mapper→reducer KeyBy fan-out as a first-class
+compiled subsystem.
+
+The paper's 20× Map-Reduce win lives in the shuffle: mappers hash-route
+items to reducers and the network does the reduction in transit. This
+package makes that shuffle compiler-visible end to end:
+
+* ``lower``  — the ``lower-shuffle`` pass: KEYBY-fed reduces become
+  per-bucket ``ShuffleBucket`` edges + per-bucket reducers whose
+  bucket→switch assignment the §3 CostModel picks under per-switch
+  memory budgets. Part of ``compiler.DEFAULT_PASSES``.
+* ``stats``  — ``plan_shuffle(plan)``: per-bucket wire bytes and switch
+  residency of a compiled plan; ``arbitrate_buckets`` picks the cheapest
+  bucket count the same way ``compile_best`` picks chain-vs-tree.
+* ``spmd``   — the vectorized device-mesh form: Pallas ``hash_partition``
+  mapper + capacity-sized ``all_to_all`` (``shuffle_reduce`` /
+  ``token_shuffle``), shared by word-count and the scenarios.
+"""
+from repro.shuffle.lower import lower_shuffle_pass, resample_weights, split_widths
+from repro.shuffle.spmd import partition_tokens, shuffle_reduce, token_shuffle
+from repro.shuffle.stats import (
+    ShuffleStats,
+    arbitrate_buckets,
+    plan_shuffle,
+    with_num_buckets,
+)
+
+__all__ = [
+    "ShuffleStats",
+    "arbitrate_buckets",
+    "lower_shuffle_pass",
+    "partition_tokens",
+    "plan_shuffle",
+    "resample_weights",
+    "shuffle_reduce",
+    "split_widths",
+    "token_shuffle",
+    "with_num_buckets",
+]

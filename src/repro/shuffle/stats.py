@@ -1,0 +1,166 @@
+"""Shuffle inspection: per-bucket traffic and switch residency of a plan.
+
+``plan_shuffle(plan)`` summarizes the lowered shuffle inside a
+``CompiledPlan`` — per-bucket key-space widths, wire bytes actually put on
+links (packets × route hops, from the same §3 cost model the placer
+optimized), the bucket→switch assignment and the per-switch reducer-state
+residency. This is the signal bucket-count arbitration minimizes: more
+buckets spread reducer state across switches but pay more per-packet
+header overhead; fewer buckets concentrate state until the hot switch's
+memory budget (and queue) gives out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Hashable, Sequence
+
+from repro.core import dag, primitives as prim
+
+NodeId = Hashable
+
+
+@dataclasses.dataclass(frozen=True)
+class ShuffleStats:
+    num_buckets: int  # declared KeyBy bucket count (max across shuffles)
+    bucket_items: dict[int, int]  # bucket -> items carried (slice width × mappers)
+    bucket_wire_bytes: dict[int, float]  # bucket -> bytes on wires (x hop retransmission)
+    bucket_switch: dict[int, NodeId]  # bucket -> reducer switch
+    residency_by_switch: dict[NodeId, int]  # switch -> per-bucket reducer state bytes
+    total_wire_bytes: float
+
+    @property
+    def max_switch_residency_bytes(self) -> int:
+        return max(self.residency_by_switch.values(), default=0)
+
+    @property
+    def hot_bucket(self) -> int | None:
+        if not self.bucket_wire_bytes:
+            return None
+        return max(self.bucket_wire_bytes, key=lambda b: (self.bucket_wire_bytes[b], -b))
+
+
+def plan_shuffle(plan) -> ShuffleStats | None:
+    """Shuffle stats of a compiled plan; ``None`` when the plan has no
+    lowered shuffle (no ``ShuffleBucket`` nodes)."""
+    program = plan.program
+    buckets = [n for n in program if isinstance(n, prim.ShuffleBucket)]
+    if not buckets:
+        return None
+    traffic = plan.cost_model.traffic(program)
+
+    # bucket_of resolves any shuffle-internal label to its bucket id:
+    # a ShuffleBucket directly, or a Reduce (per-bucket reducer OR an
+    # insert-combiners partial aggregate) whose sources all resolve to one
+    # bucket. None for everything else (mappers, Concat, mixed reduces).
+    bucket_of: dict[str, int | None] = {n.name: n.bucket for n in buckets}
+
+    def resolve(label: str) -> int | None:
+        if label in bucket_of:
+            return bucket_of[label]
+        node = program.nodes[label]
+        b: int | None = None
+        if isinstance(node, prim.Reduce):
+            got = {resolve(s) for s in node.srcs}
+            if len(got) == 1:
+                b = got.pop()
+        bucket_of[label] = b
+        return b
+
+    bucket_items: dict[int, int] = {}
+    for n in buckets:
+        bucket_items[n.bucket] = bucket_items.get(n.bucket, 0) + n.width
+
+    # wire bytes of the shuffle fan-out: every routed edge that stays
+    # inside one bucket's reduce tree (bucket edge → combiner → reducer);
+    # the reducer→Concat flush is collection-phase traffic, not counted
+    bucket_wire: dict[int, float] = {b: 0.0 for b in bucket_items}
+    for r in plan.routes.routes:
+        b = resolve(r.src_label)
+        if b is not None and resolve(r.dst_label) == b:
+            bucket_wire[b] = bucket_wire.get(b, 0.0) + (
+                plan.cost_model.wire_bytes(traffic[r.src_label].packets) * r.hops
+            )
+
+    bucket_switch: dict[int, NodeId] = {}
+    residency: dict[NodeId, int] = {}
+    for n in program:
+        if not isinstance(n, prim.Reduce):
+            continue
+        b = resolve(n.name)
+        if b is None:
+            continue
+        sw = plan.placement.switch_of(n.name)
+        residency[sw] = residency.get(sw, 0) + n.state_bytes(plan.cost_model.item_bytes)
+        # the bucket's reducer is the root of its reduce tree (no consumer
+        # still inside the same bucket)
+        if not any(resolve(c) == b for c in program.consumers(n.name)):
+            bucket_switch.setdefault(b, sw)
+
+    return ShuffleStats(
+        num_buckets=max(n.num_buckets for n in buckets),
+        bucket_items=dict(sorted(bucket_items.items())),
+        bucket_wire_bytes=dict(sorted(bucket_wire.items())),
+        bucket_switch=dict(sorted(bucket_switch.items())),
+        residency_by_switch=residency,
+        total_wire_bytes=sum(bucket_wire.values()),
+    )
+
+
+def with_num_buckets(program: dag.Program, num_buckets: int) -> dag.Program:
+    """Copy of ``program`` with every KeyBy rewritten to ``num_buckets``
+    (declared skew re-binned via ``resample_weights``), for bucket-count
+    arbitration."""
+    from repro.shuffle.lower import resample_weights
+
+    nodes = []
+    for n in program:
+        if isinstance(n, prim.KeyBy):
+            weights = (
+                resample_weights(n.weights, num_buckets) if n.weights is not None else None
+            )
+            n = prim.KeyBy(
+                name=n.name, src=n.src, num_buckets=num_buckets, weights=weights
+            )
+        nodes.append(n)
+    return dag.Program.from_nodes(nodes)
+
+
+def arbitrate_buckets(
+    program_or_factory,
+    topology,
+    candidates: Sequence[int],
+    *,
+    cost_model=None,
+    pins=None,
+    passes=None,
+):
+    """Compile one plan per candidate bucket count, keep the cheapest.
+
+    The same move as ``compiler.compile_best``'s chain-vs-tree arbitration,
+    applied to the shuffle's fan-out degree: the §3 cost model prices each
+    bucket count's plan (per-packet header overhead vs state concentration)
+    and the min-cost plan wins. ``program_or_factory`` is either a Program
+    whose KeyBys are rewritten per candidate, or a callable
+    ``(num_buckets) -> Program``.
+    """
+    from repro import compiler
+
+    if not candidates:
+        raise ValueError("need at least one candidate bucket count")
+    make: Callable[[int], dag.Program]
+    if callable(program_or_factory):
+        make = program_or_factory
+    else:
+        make = lambda b: with_num_buckets(program_or_factory, b)  # noqa: E731
+    plans = []
+    for b in dict.fromkeys(candidates):
+        plans.append(
+            compiler.compile(
+                make(b),
+                topology,
+                cost_model=cost_model,
+                pins=dict(pins) if pins else None,
+                passes=passes,
+            )
+        )
+    return min(plans, key=lambda pl: pl.cost.scalar)

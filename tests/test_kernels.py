@@ -36,6 +36,44 @@ def test_hash_partition_property(n, buckets):
     assert int(np.asarray(hist).sum()) == int((np.asarray(t) >= 0).sum())
 
 
+@pytest.mark.parametrize("n,buckets", [
+    (1, 2),        # single token
+    (1023, 8),     # one short of the block size
+    (1024, 8),     # exactly one block
+    (1025, 8),     # one into the second block (kernel pads with -1)
+    (3000, 16),    # multi-block, ragged tail
+])
+def test_hash_partition_interpret_matches_ref(n, buckets):
+    """Satellite: bucket ids match kernels/ref.py and the histogram counts
+    every valid token exactly once, across block-boundary sizes."""
+    rs = np.random.RandomState(n + buckets)
+    t = jnp.asarray(rs.randint(0, 100000, n).astype(np.int32))
+    ids, hist = ops.hash_partition(t, buckets, interpret=True)
+    rids, rhist = ref.hash_partition(t, buckets)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(rhist))
+    assert int(np.asarray(hist).sum()) == n
+    assert np.asarray(ids).shape == (n,)  # kernel's own block padding is stripped
+
+
+def test_hash_partition_excludes_padding_tokens():
+    """Satellite: -1 padding tokens get bucket id -1 and are not counted
+    in the histogram — including a shard that is entirely padding."""
+    rs = np.random.RandomState(11)
+    toks = rs.randint(0, 500, 700).astype(np.int32)
+    toks[::7] = -1  # sprinkle padding mid-stream, not just at the tail
+    ids, hist = ops.hash_partition(jnp.asarray(toks), 8, interpret=True)
+    ids, hist = np.asarray(ids), np.asarray(hist)
+    np.testing.assert_array_equal(ids[toks == -1], -1)
+    assert (ids[toks >= 0] >= 0).all() and (ids[toks >= 0] < 8).all()
+    assert int(hist.sum()) == int((toks >= 0).sum())
+
+    all_pad = jnp.full((256,), -1, jnp.int32)
+    ids2, hist2 = ops.hash_partition(all_pad, 4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ids2), np.full((256,), -1))
+    np.testing.assert_array_equal(np.asarray(hist2), np.zeros((4,), np.int32))
+
+
 @pytest.mark.parametrize("n", [100, 16384, 40000])
 def test_ring_fused_step_sweep(n):
     rs = np.random.RandomState(n)

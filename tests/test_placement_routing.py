@@ -52,6 +52,51 @@ def test_memory_budget_forces_spill_or_fails():
         plc.place(p, t, memory_budget_bytes=100)
 
 
+def test_equal_cost_routes_spread_by_link_load():
+    """Satellite: when BFS admits several equal-cost shortest paths, later
+    edges avoid links earlier edges claimed — two bucket edges between the
+    same switch pair take different paths."""
+    p = dag.Program()
+    p.store("S", host="h1", items=8)
+    p.bucket("K__b0", "S", bucket=0, num_buckets=2, offset=0, width=4)
+    p.bucket("K__b1", "S", bucket=1, num_buckets=2, offset=4, width=4)
+    p.sum("R__p0", "K__b0", state_width=4)
+    p.sum("R__p1", "K__b1", state_width=4)
+    p.concat("R", "R__p0", "R__p1")
+    p.collect("OUT", "R", sink_host="h6")
+    t = topo.paper_topology()
+    # both per-bucket reducers at the sink switch: the two bucket edges run
+    # S1 -> S6 (hop distance 3; minimal paths S1-S2-S3-S6, S1-S2-S5-S6,
+    # S1-S4-S5-S6)
+    pl = plc.place(p, t, pins={"R__p0": "S6", "R__p1": "S6", "R": "S6"})
+    rt = routing.build_routes(p, t, pl)
+    paths = [r.path for r in rt.routes if r.path[0] == "S1" and r.path[-1] == "S6"]
+    assert len(paths) >= 2
+    assert len(set(paths)) >= 2, f"equal-cost edges did not spread: {paths}"
+    for path in paths:
+        assert len(path) - 1 == t.hop_distance("S1", "S6")  # still shortest
+        for a, b in zip(path, path[1:]):
+            assert b in t.neighbors(a)
+
+
+def test_load_aware_routing_matches_distance_on_torus():
+    t = topo.TorusTopology(dims=(4, 4))
+    p = dag.Program()
+    p.store("A", host="d0", items=4)
+    p.store("B", host="d0", items=4)
+    p.sum("R1", "A", "B", state_width=4)
+    p.sum("R2", "A", "B", state_width=4)
+    pl = plc.place(p, t, pins={"R1": 15, "R2": 15})
+    rt = routing.build_routes(p, t, pl)
+    for r in rt.routes:
+        assert r.hops == t.hop_distance(r.path[0], r.path[-1])
+        for a, b in zip(r.path, r.path[1:]):
+            assert b in t.neighbors(a)
+    # four 0->15 edges over two dimension orders: both minimal orders used
+    corner = {r.path for r in rt.routes if r.path[0] == 0 and r.path[-1] == 15}
+    assert len(corner) >= 2
+
+
 def test_attach_switch_accepts_both_spellings_and_names_both_on_miss():
     t = topo.paper_topology()
     assert t.attach_switch("h1") == "S1"
