@@ -12,7 +12,6 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 from repro.core.scenarios import Scenario, wire_bytes_per_device
 

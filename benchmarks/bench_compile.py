@@ -1,5 +1,7 @@
 """Compiler benchmark: time compile + simulate across program sizes and
-record optimized-vs-flat §3 cost, writing a BENCH_compile.json artifact.
+record optimized-vs-flat §3 cost plus static-ECMP vs feedback-routed
+streamed makespans, writing a BENCH_compile.json artifact (gated by CI's
+bench-smoke regression check on the simulated metrics).
 
     PYTHONPATH=src:. python benchmarks/run.py compile
 """
@@ -30,10 +32,14 @@ def _time_us(fn, repeats: int = 5) -> float:
 def _case(name: str, program_or_src, topo, inputs) -> dict:
     plan = compiler.compile_best(program_or_src, topo)  # cost model picks pipeline
     flat = compiler.compile(program_or_src, topo, passes=compiler.UNOPTIMIZED_PASSES)
+    static = compiler.compile(program_or_src, topo, passes=compiler.STATIC_ECMP_PASSES)
     compile_us = _time_us(lambda: compiler.compile(program_or_src, topo))
     simulate_us = _time_us(lambda: plan.simulate(inputs))
     sim = plan.simulate(inputs)
     sim_flat = flat.simulate(inputs)
+    feedback = compiler.compile(program_or_src, topo)  # full pipeline
+    sim_static = static.simulate_timing()
+    sim_feedback = feedback.simulate_timing()
     return {
         "name": name,
         "nodes_in": len(flat.program),
@@ -45,6 +51,10 @@ def _case(name: str, program_or_src, topo, inputs) -> dict:
         "sim_time_best_us": round(sim.report.time_s * 1e6, 4),
         "sim_time_flat_us": round(sim_flat.report.time_s * 1e6, 4),
         "speedup": round(sim_flat.report.time_s / max(sim.report.time_s, 1e-30), 3),
+        # static route-count ECMP vs measured-queueing feedback routing,
+        # both on the fully optimized program
+        "makespan_ticks_static": sim_static.makespan_ticks,
+        "makespan_ticks_feedback": sim_feedback.makespan_ticks,
         "hops_best": sim.report.edge_hops,
         "hops_flat": sim_flat.report.edge_hops,
         "recirc_best": sim.report.recirculations,
@@ -79,7 +89,9 @@ def run() -> list[tuple[str, float, str]]:
             f"compile.{r['name']}", r["compile_us"],
             f"simulate={r['simulate_us']:.0f}us "
             f"sim_best={r['sim_time_best_us']}us sim_flat={r['sim_time_flat_us']}us "
-            f"speedup={r['speedup']}x hops={r['hops_best']}/{r['hops_flat']}",
+            f"speedup={r['speedup']}x hops={r['hops_best']}/{r['hops_flat']} "
+            f"makespan_static/feedback={r['makespan_ticks_static']}/"
+            f"{r['makespan_ticks_feedback']}t",
         ))
     rows.append(("compile.artifact", 0.0, f"wrote {os.path.basename(OUT_PATH)}"))
     return rows

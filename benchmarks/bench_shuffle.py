@@ -1,11 +1,18 @@
-"""Shuffle benchmark: num_buckets × skew sweep on fat-tree and torus.
+"""Shuffle benchmark: num_buckets × skew sweep on fat-tree and torus,
+static ECMP vs queue-feedback routing.
 
 For each (topology, bucket count, skew) cell the word-count shuffle
-program is compiled (lower-shuffle fan-out, cost-model bucket→switch
-assignment) and run through the packet simulator: modelled completion
-time, per-switch queueing, per-bucket wire bytes and the hottest switch's
-reducer-state residency — the quantities the bucket-count arbitration
-trades off. Writes a BENCH_shuffle.json artifact.
+program is compiled twice — once stopping at the static route-count ECMP
+tie-break (``STATIC_ECMP_PASSES``) and once through the full pipeline
+whose ``reroute-feedback`` pass re-routes on the streaming simulator's
+*measured* per-switch queueing — and both plans run through the
+per-packet simulator: streamed makespan, queueing delay, per-bucket wire
+bytes and the hottest switch's reducer-state residency. The
+static-vs-feedback makespan pair is the headline: feedback routing must
+never lose, and wins where skewed buckets collide on fat-tree links.
+Writes a BENCH_shuffle.json artifact; CI's bench-smoke job fails if any
+simulated metric regresses >10% against the committed baseline
+(``benchmarks/check_regression.py``).
 
     PYTHONPATH=src:. python benchmarks/run.py shuffle
 """
@@ -47,8 +54,9 @@ def _case(topo_name, topo, hosts, sink, num_buckets, skew) -> dict:
         N_MAPPERS, VOCAB, num_buckets=num_buckets,
         weights=_weights(num_buckets, skew), hosts=hosts, sink_host=sink,
     )
+    static = compiler.compile(prog, topo, passes=compiler.STATIC_ECMP_PASSES)
     t0 = time.perf_counter()
-    plan = compiler.compile(prog, topo)
+    plan = compiler.compile(prog, topo)  # full pipeline incl. reroute-feedback
     compile_us = (time.perf_counter() - t0) * 1e6
     rs = np.random.RandomState(num_buckets * 7 + int(skew * 3))
     inputs = {
@@ -56,19 +64,26 @@ def _case(topo_name, topo, hosts, sink, num_buckets, skew) -> dict:
         for i in range(N_MAPPERS)
     }
     sim = plan.simulate(inputs)
+    sim_static = static.simulate_timing()
     stats = shuffle.plan_shuffle(plan)
     ref = np.sum([inputs[f"s{i}"] for i in range(N_MAPPERS)], axis=0)
     np.testing.assert_array_equal(sim.outputs["OUT"], ref)  # shuffle is exact
+    r = sim.report
     return {
         "topology": topo_name,
         "num_buckets": num_buckets,
         "skew": skew,
         "compile_us": round(compile_us, 1),
-        "sim_time_us": round(sim.report.time_s * 1e6, 3),
-        "makespan_ticks": sim.report.makespan_ticks,
-        "queue_delay_ticks": sim.report.queue_delay_ticks,
-        "queued_switches": len(sim.report.queued_batches),
-        "wire_bytes": round(sim.report.wire_bytes, 1),
+        # feedback-routed (the emitted plan) vs static-ECMP streamed timing
+        "sim_time_us": round(r.time_s * 1e6, 3),
+        "sim_time_us_static": round(sim_static.time_s * 1e6, 3),
+        "makespan_ticks": r.makespan_ticks,
+        "makespan_ticks_static": sim_static.makespan_ticks,
+        "queue_delay_ticks": r.queue_delay_ticks,
+        "queue_delay_ticks_static": sim_static.queue_delay_ticks,
+        "feedback_rounds": (plan.feedback or {}).get("rounds", 0),
+        "queued_switches": len(r.queued_batches),
+        "wire_bytes": round(r.wire_bytes, 1),
         "bucket_wire_bytes": {str(k): round(v, 1) for k, v in stats.bucket_wire_bytes.items()},
         "hot_bucket": stats.hot_bucket,
         "max_switch_residency_bytes": stats.max_switch_residency_bytes,
@@ -88,12 +103,15 @@ def run() -> list[tuple[str, float, str]]:
 
     rows = []
     for r in records:
+        gain = r["makespan_ticks_static"] - r["makespan_ticks"]
+        pct = 100.0 * gain / max(r["makespan_ticks_static"], 1)
         rows.append((
             f"shuffle.{r['topology']}.b{r['num_buckets']}.skew{r['skew']}",
             r["sim_time_us"],
-            f"queue={r['queue_delay_ticks']}t hot_bucket={r['hot_bucket']} "
-            f"residency_max={r['max_switch_residency_bytes']}B "
-            f"reducers@{r['reducer_switches']}sw",
+            f"static={r['makespan_ticks_static']}t feedback={r['makespan_ticks']}t "
+            f"({pct:+.1f}%) queue={r['queue_delay_ticks']}t "
+            f"hot_bucket={r['hot_bucket']} "
+            f"residency_max={r['max_switch_residency_bytes']}B",
         ))
     rows.append(("shuffle.artifact", 0.0, f"wrote {os.path.basename(OUT_PATH)}"))
     return rows

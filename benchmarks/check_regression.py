@@ -1,0 +1,102 @@
+"""Benchmark-regression gate for the CI bench-smoke job.
+
+Compares a freshly generated BENCH_*.json against the committed baseline
+and fails (exit 1) when any *simulated* metric regresses beyond the
+tolerance. Only deterministic simulator outputs are compared — streamed
+makespan, modelled time, queueing, wire bytes — never wall-clock fields
+like ``compile_us``/``simulate_us``, which vary with the runner. All
+gated metrics are lower-is-better.
+
+Records are matched by their identity fields (name, topology,
+num_buckets, skew — whichever are present). A baseline record missing
+from the current run fails too (silent coverage loss reads as "no
+regression" otherwise); records only present in the current run are
+reported but pass — they are new coverage awaiting a baseline.
+
+    python benchmarks/check_regression.py \
+        --baseline /tmp/bench-baseline/BENCH_shuffle.json \
+        --current BENCH_shuffle.json --tolerance 0.10
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# lower-is-better simulated metrics the gate compares (exact-name match)
+GATED_METRICS = (
+    "sim_time_us",
+    "sim_time_us_static",
+    "sim_time_best_us",
+    "sim_time_flat_us",
+    "makespan_ticks",
+    "makespan_ticks_static",
+    "makespan_ticks_feedback",
+    "queue_delay_ticks",
+    "queue_delay_ticks_static",
+    "wire_bytes",
+)
+# fields that identify a record across runs (all that are present)
+IDENTITY = ("name", "topology", "num_buckets", "skew")
+ABS_EPSILON = 2.0  # ignore sub-tick jitter on tiny integer metrics
+
+
+def record_key(rec: dict) -> tuple:
+    return tuple((k, rec[k]) for k in IDENTITY if k in rec)
+
+
+def check(baseline: list[dict], current: list[dict], tolerance: float) -> list[str]:
+    cur_by_key = {record_key(r): r for r in current}
+    errors: list[str] = []
+    compared = 0
+    for base in baseline:
+        key = record_key(base)
+        label = ".".join(str(v) for _, v in key) or "<record>"
+        cur = cur_by_key.get(key)
+        if cur is None:
+            errors.append(f"{label}: baseline record missing from current run")
+            continue
+        for metric in GATED_METRICS:
+            if metric not in base or metric not in cur:
+                continue
+            b, c = float(base[metric]), float(cur[metric])
+            compared += 1
+            if c > b * (1.0 + tolerance) + ABS_EPSILON:
+                errors.append(
+                    f"{label}: {metric} regressed {b:g} -> {c:g} "
+                    f"(+{100.0 * (c - b) / max(b, 1e-12):.1f}%, tolerance "
+                    f"{100.0 * tolerance:.0f}%)"
+                )
+    if compared == 0:
+        errors.append("no comparable metrics found between baseline and current")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed BENCH json")
+    ap.add_argument("--current", required=True, help="freshly generated BENCH json")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative regression (default 0.10 = 10%%)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    errors = check(baseline, current, args.tolerance)
+    new = len(current) - sum(
+        1 for r in current if record_key(r) in {record_key(b) for b in baseline}
+    )
+    if new:
+        print(f"note: {new} record(s) have no baseline yet (pass; commit to gate them)")
+    if errors:
+        print(f"FAIL: {len(errors)} regression(s) beyond {100 * args.tolerance:.0f}%:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"OK: {len(baseline)} baseline record(s) within {100 * args.tolerance:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

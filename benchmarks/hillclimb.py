@@ -24,7 +24,6 @@ import dataclasses
 import json
 import time
 
-import numpy as np
 
 from repro.analysis import roofline as rl
 from repro.configs import get_config

@@ -1,5 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
+CI's ``bench-smoke`` job replays the shuffle/compile/scenarios modules
+on every PR, uploads the BENCH_*.json artifacts, and fails when any
+*simulated* metric (streamed makespan, modelled time, wire bytes — never
+wall clock) regresses >10% against the committed baselines; see
+``benchmarks/check_regression.py``. Regenerate and commit the BENCH
+jsons when a model change legitimately moves them.
+
 Prints ``name,us_per_call,derived`` CSV. Modules:
   bench_serialization   — §3 Eq (1) table
   bench_cpu_map_reduce  — Fig 6 & 7 (measured CPU map/reduce)

@@ -55,7 +55,6 @@ def main():
     n_tok = x.shape[0] * x.shape[1]
     d = cfg.d_model
     bytes_a2a = 3 * (n_tok // 4) * cfg.moe.top_k * d * 4  # send+recv+return per rank
-    bytes_rep = 0  # replicated: every rank already has every token (paid upstream)
     print(f"tokens routed through the shuffle per rank: {(n_tok // 4) * cfg.moe.top_k}")
     print(f"shuffle wire bytes/rank ≈ {bytes_a2a/1e3:.1f} kB; "
           f"replicated pays {n_tok * d * 4 / 1e3:.1f} kB of token replication instead")

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Callable
+from typing import Any
 
 import numpy as np
 

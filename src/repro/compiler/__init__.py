@@ -7,12 +7,15 @@
 
 Pipeline: parse → validate → dead-node-elim → lower-shuffle (KeyBy →
 per-bucket routed edges, see ``repro.shuffle``) → rebalance-reduce-tree →
-insert-combiners → place (§3 cost model) → route → emit. Every stage is a
-registered pass over a shared ``CompileCtx``; see ``driver.py``.
+insert-combiners → place (§3 cost model) → route → reroute-feedback
+(streaming-simulate, then re-route on *measured* per-switch queueing and
+per-bucket traffic, to a fixed point) → emit. Every stage is a registered
+pass over a shared ``CompileCtx``; see ``driver.py``.
 """
 from repro.compiler.cost import CostModel, PlanCost, Traffic
 from repro.compiler.driver import (
     DEFAULT_PASSES,
+    STATIC_ECMP_PASSES,
     UNOPTIMIZED_PASSES,
     CompileCtx,
     PassManager,
@@ -25,7 +28,7 @@ from repro.compiler.driver import (
 )
 from repro.compiler.jax_backend import emit_step
 from repro.compiler.plan import CompiledPlan
-from repro.compiler.simulator import SimReport, SimResult, SimulatorBackend
+from repro.compiler.simulator import SimReport, SimResult, SimulatorBackend, simulate_timing
 
 # importing the pass module registers the built-in passes
 from repro.compiler import passes as _passes  # noqa: F401
@@ -36,6 +39,7 @@ __all__ = [
     "Traffic",
     "compile_best",
     "DEFAULT_PASSES",
+    "STATIC_ECMP_PASSES",
     "UNOPTIMIZED_PASSES",
     "CompileCtx",
     "PassManager",
@@ -49,4 +53,5 @@ __all__ = [
     "SimReport",
     "SimResult",
     "SimulatorBackend",
+    "simulate_timing",
 ]

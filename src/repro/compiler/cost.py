@@ -68,8 +68,19 @@ class CostModel:
     item_bytes: int = 8
     recirculation_s: float = 1e-6  # per stateful-merge recirculation
     max_fanin: int = 8  # cap on multi-way reduce width
+    # streaming-simulator granularity: packet trains longer than this are
+    # coalesced into integer-weight super-packets (bounds event count)
+    sim_train_cap: int = 256
 
     # ------------------------------------------------------------ traffic --
+    @property
+    def tick_s(self) -> float:
+        """Wall time of one streaming-simulator tick — one packet's
+        service at a switch: serializing ``packet.total_bits`` at line
+        rate C, floored by the forwarding latency. This is the §3 ``C/e``
+        throttle expressed as a per-switch service rate."""
+        return max(self.packet.total_bits / self.link_bps, self.hop_latency_s)
+
     def wire_bytes(self, packets: int) -> float:
         return packets * self.packet.total_bits / 8.0
 

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Hashable, Iterable, Sequence
+from typing import Any, Callable, Hashable, Sequence
 
 from repro.compiler.cost import CostModel
 from repro.compiler.plan import CompiledPlan
@@ -78,7 +78,14 @@ DEFAULT_PASSES: tuple[str, ...] = (
     "insert-combiners",
     "place",
     "route",
+    "reroute-feedback",
     "emit",
+)
+# DEFAULT_PASSES without the measured-queueing reroute loop: routes stay
+# on the static route-count ECMP tie-break. The benchmarks compile under
+# both to price what feedback routing buys.
+STATIC_ECMP_PASSES: tuple[str, ...] = tuple(
+    p for p in DEFAULT_PASSES if p != "reroute-feedback"
 )
 UNOPTIMIZED_PASSES: tuple[str, ...] = ("parse", "validate", "place", "route", "emit")
 

@@ -328,6 +328,69 @@ def route_pass(ctx: CompileCtx) -> str:
     return f"{len(ctx.routes.routes)} routes, total_hops={ctx.routes.total_hops}"
 
 
+@register_pass("reroute-feedback")
+def reroute_feedback_pass(ctx: CompileCtx) -> str:
+    """Close the route → simulate → reroute loop on *measured* queueing.
+
+    The ``route`` pass spreads equal-cost ties by static route counts —
+    blind to how many packets each route actually carries and to stateful
+    recirculation hotspots. This pass runs the streaming simulator on the
+    current routes, then re-runs ``build_routes`` with (a) per-edge
+    *packet* weights from the cost model's traffic (a hot shuffle bucket
+    claims more of a link than a cold one) and (b) per-switch penalties
+    from the simulator's measured queueing, normalized below packet scale
+    so they steer ties rather than override traffic. It iterates to a
+    routing fixed point or ``options["reroute_rounds"]`` (default 3),
+    keeping the best-makespan table seen — so the emitted plan's streamed
+    makespan never exceeds the static-ECMP plan's.
+    """
+    if ctx.placement is None or ctx.routes is None:
+        raise ValueError("reroute-feedback requires routes (run 'route' first)")
+    from repro.compiler.simulator import simulate_timing
+
+    p = ctx.require_program()
+    cm = ctx.cost_model
+    max_rounds = int(ctx.options.get("reroute_rounds", 3))
+    static_rep = simulate_timing(p, ctx.routes, cm)
+    stats = {
+        "rounds": 0,
+        "converged": False,
+        "static_makespan_ticks": static_rep.makespan_ticks,
+        "static_time_s": static_rep.time_s,
+        "makespan_ticks": static_rep.makespan_ticks,
+        "time_s": static_rep.time_s,
+    }
+    ctx.options["reroute_feedback"] = stats
+    if max_rounds <= 0:
+        return "disabled (reroute_rounds=0)"
+
+    traffic = cm.traffic(p)
+    weights = {lbl: float(t.packets) for lbl, t in traffic.items()}
+    cur, cur_rep = ctx.routes, static_rep
+    best, best_rep = cur, cur_rep
+    for round_no in range(1, max_rounds + 1):
+        scale = max(cur_rep.queued_batches.values(), default=0) + 1.0
+        penalty = {sw: q / scale for sw, q in cur_rep.queued_batches.items()}
+        nxt = build_routes(
+            p, ctx.topology, ctx.placement, edge_weight=weights, switch_penalty=penalty
+        )
+        stats["rounds"] = round_no
+        if [r.path for r in nxt.routes] == [r.path for r in cur.routes]:
+            stats["converged"] = True
+            break
+        cur, cur_rep = nxt, simulate_timing(p, nxt, cm)
+        if cur_rep.time_s < best_rep.time_s:
+            best, best_rep = cur, cur_rep
+    ctx.routes = best
+    stats["makespan_ticks"] = best_rep.makespan_ticks
+    stats["time_s"] = best_rep.time_s
+    return (
+        f"{stats['rounds']} round(s), "
+        f"{'fixed point' if stats['converged'] else 'round cap'}, "
+        f"makespan {static_rep.makespan_ticks}→{best_rep.makespan_ticks} ticks"
+    )
+
+
 @register_pass("emit")
 def emit_pass(ctx: CompileCtx) -> str:
     if ctx.placement is None or ctx.routes is None:
@@ -343,5 +406,6 @@ def emit_pass(ctx: CompileCtx) -> str:
         cost=cost,
         pins=dict(ctx.pins),
         trace=tuple(ctx.trace),
+        feedback=ctx.options.get("reroute_feedback"),
     )
     return f"plan: {len(p)} nodes, cost={cost.serial_time_s * 1e6:.2f}us"

@@ -35,6 +35,9 @@ class CompiledPlan:
     cost: PlanCost
     pins: dict[str, NodeId] = dataclasses.field(default_factory=dict)
     trace: tuple = ()  # PassRecords from the driver, for diagnostics
+    # reroute-feedback stats (rounds, converged, static vs feedback
+    # makespan) when that pass ran; None otherwise
+    feedback: dict | None = None
 
     # ------------------------------------------------------------ backends --
     def jax_step(self, *, axis_name: str = "all", item_dtype=None):
@@ -53,10 +56,23 @@ class CompiledPlan:
         )
 
     def simulate(self, inputs: Mapping[str, np.ndarray]):
-        """Run the packet-level simulator; returns a ``SimResult``."""
+        """Run the streaming packet simulator; returns a ``SimResult``."""
         from repro.compiler.simulator import SimulatorBackend
 
         return SimulatorBackend(self).run(inputs)
+
+    def simulate_timing(self):
+        """Timing half of the simulator alone (no input arrays needed);
+        returns a ``SimReport``. Streamed makespan depends on traffic
+        shapes, not payload values — this is what bucket-count
+        arbitration and the reroute-feedback loop consume. Memoized:
+        program/routes are fixed once emitted, and arbitration + stats +
+        benchmarks would otherwise re-run the same simulation."""
+        if getattr(self, "_timing_report", None) is None:
+            from repro.compiler.simulator import simulate_timing
+
+            self._timing_report = simulate_timing(self.program, self.routes, self.cost_model)
+        return self._timing_report
 
     def execute_reference(self, inputs: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
         """Pure-numpy oracle on this plan's (rewritten) program."""

@@ -1,38 +1,62 @@
-"""Packet-level dataplane simulator backend.
+"""Per-packet streaming dataplane simulator backend.
 
-Executes a ``CompiledPlan`` hop by hop without any devices, so §3
+Executes a ``CompiledPlan`` packet by packet without any devices, so §3
 cost-model predictions can be validated against observed behaviour (the
-role the paper's Mininet deployment plays). The model, deliberately
-simple and deterministic:
+role the paper's Mininet deployment plays). The model is deliberately
+simple and deterministic, but — unlike the original one-batch-per-edge
+form — it streams:
 
-* time advances in **ticks**; forwarding a batch of packets across one
-  hop takes one tick (the hop latency);
-* each switch forwards **one batch per tick** — two batches contending
-  for the same switch queue, and the loser's wait is counted as queueing
-  delay (``queued_batches`` / ``queue_delay_ticks``);
-* a Reduce merging k upstream batches holds state on its switch and
+* every DAG edge emits a **packet train** sized by the cost model's
+  dtype-aware packing (``CostModel.traffic``), not one opaque batch;
+* each switch is a **service station**: forwarding one packet occupies
+  the switch for one tick (the §3 ``C/e`` throttle as a service rate —
+  ``CostModel.tick_s`` converts ticks back to seconds at line rate C),
+  so a train crossing h hops finishes in ``h + packets − 1`` ticks
+  instead of ``h``: hop latency overlaps with transmission and makespan
+  is set by the bottleneck stage, the paper's pipelining argument;
+* switch queues are **event-ordered** (one global time-ordered heap):
+  packets from different trains interleave at shared switches in
+  arrival order, the loser's wait is counted as queueing delay
+  (``queue_delay_ticks`` / per-switch ``queued_batches``), and the
+  per-switch backlog seen on arrival feeds ``max_queue_depth``;
+* a Reduce merging k upstream trains holds state on its switch and
   **recirculates** the stored partial once per additional source
-  (k−1 recirculations), the §3 stateful-processing penalty;
+  (k−1 recirculations), the §3 stateful-processing penalty. The
+  recirculated packets occupy the destination switch like any other
+  service — they are counted in ``queued_batches`` and delay transit
+  traffic through that switch, so stateful hotspots are visible to the
+  ``reroute-feedback`` pass;
 * a lowered shuffle's ``ShuffleBucket`` edges each carry only their
-  bucket's slice of the traffic (skewed histograms → hot buckets put more
-  packets on the wire, and converging bucket edges contend in the
-  destination switch's queue);
-* numeric payloads are carried along, so simulator outputs are the same
-  values ``codelet.execute_reference`` produces — functional equivalence
-  and timing come from one run.
+  bucket's slice of the traffic (skewed histograms → hot buckets put
+  longer trains on the wire, and converging bucket trains contend in
+  the destination-side switch queues);
+* very long trains are coalesced into at most
+  ``CostModel.sim_train_cap`` super-packets with integer weights, so
+  event count stays bounded while tick arithmetic is unchanged (a
+  super-packet of weight w behaves exactly like w back-to-back
+  packets).
+
+Functional outputs come from ``codelet.execute_reference`` on the same
+(rewritten) program, so simulator outputs are the values the reference
+oracle produces — functional equivalence and timing come from one run.
 
 ``SimReport.edge_hops`` equals ``RoutingTable.total_hops`` by
-construction (each route edge is traversed exactly once per batch);
-tests pin that invariant.
+construction (each route edge is traversed exactly once per train);
+tests pin that invariant. ``simulate_timing`` exposes the timing half
+alone (it needs no input arrays — timing depends on traffic shapes, not
+payload values), which is what the ``reroute-feedback`` pass and
+bucket-count arbitration consume.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Hashable, Mapping
 
 import numpy as np
 
-from repro.core import primitives as prim
+from repro.core import dag, primitives as prim
+from repro.core.routing import RoutingTable
 
 NodeId = Hashable
 
@@ -40,13 +64,25 @@ NodeId = Hashable
 @dataclasses.dataclass(frozen=True)
 class SimReport:
     edge_hops: int  # Σ route hops (matches RoutingTable.total_hops)
-    packet_hops: int  # hop traversals × packets per batch
+    packet_hops: int  # hop traversals × packets per train
     recirculations: int
     makespan_ticks: int
     queue_delay_ticks: int
-    queued_batches: dict[NodeId, int]  # per-switch batches that had to wait
+    # per-switch packets that had to wait, including the destination
+    # switch's own recirculated packets (stateful hotspots)
+    queued_batches: dict[NodeId, int]
     wire_bytes: float
     time_s: float  # modelled completion time (the cost scalar)
+    switch_busy_ticks: dict[NodeId, int] = dataclasses.field(default_factory=dict)
+    switch_utilization: dict[NodeId, float] = dataclasses.field(default_factory=dict)
+    max_queue_depth: dict[NodeId, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def hot_switch(self) -> NodeId | None:
+        """Switch with the most queued packets (None when nothing queued)."""
+        if not self.queued_batches:
+            return None
+        return max(self.queued_batches, key=lambda s: (self.queued_batches[s], str(s)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,8 +91,186 @@ class SimResult:
     report: SimReport
 
 
+@dataclasses.dataclass
+class _Flow:
+    """One routed DAG edge: a packet train travelling ``path``."""
+
+    src: str
+    dst: str
+    path: tuple[NodeId, ...]
+    train: tuple[int, ...]  # super-packet weights, sum == traffic packets
+    remaining: int = 0  # super-packets still crossing the last hop
+    last_arrival: float = 0.0
+
+
+def _train(packets: int, cap: int) -> tuple[int, ...]:
+    """Split ``packets`` into ≤ ``cap`` integer-weight super-packets."""
+    n = max(1, min(packets, cap))
+    base, rem = divmod(packets, n)
+    return (base + 1,) * rem + (base,) * (n - rem)
+
+
+def simulate_timing(program: dag.Program, routes: RoutingTable, cost_model) -> SimReport:
+    """Stream every routed edge's packet train through event-ordered
+    switch queues; returns the timing report."""
+    cm = cost_model
+    traffic = cm.traffic(program)
+    cap = max(1, getattr(cm, "sim_train_cap", 256))
+
+    flows: list[_Flow] = []
+    in_flows: dict[str, list[int]] = {}
+    out_flows: dict[str, list[int]] = {}
+    for r in routes.routes:
+        pk = traffic[r.src_label].packets if r.src_label in traffic else 1
+        in_flows.setdefault(r.dst_label, []).append(len(flows))
+        out_flows.setdefault(r.src_label, []).append(len(flows))
+        flows.append(
+            _Flow(src=r.src_label, dst=r.dst_label, path=tuple(r.path), train=_train(pk, cap))
+        )
+
+    pending = {name: len(in_flows.get(name, ())) for name in program.nodes}
+    arrived: dict[str, float] = {}  # node -> latest in-flow last-packet arrival
+    dst_switch: dict[str, NodeId] = {f.dst: f.path[-1] for f in flows}
+    ready: dict[str, float] = {}
+
+    next_free: dict[NodeId, float] = {}
+    busy: dict[NodeId, float] = {}
+    queued: dict[NodeId, int] = {}
+    max_depth: dict[NodeId, float] = {}
+    edge_hops = packet_hops = recirc = 0
+    queue_delay = 0.0
+    wire_bytes = 0.0
+
+    # heap events: (tick, seq, kind, a, b) with kind "pkt" (a=flow id,
+    # b=(super-packet index, hop index)) or "recirc" (a=node label)
+    heap: list[tuple[float, int, str, object, object]] = []
+    seq = 0
+
+    def push(t: float, kind: str, a, b=None) -> None:
+        nonlocal seq
+        seq += 1
+        heapq.heappush(heap, (t, seq, kind, a, b))
+
+    def serve(sw: NodeId, t: float, width: int) -> float:
+        """One service of ``width`` packet-ticks at ``sw``: queue
+        accounting + switch occupancy; returns the completion tick."""
+        nonlocal queue_delay
+        backlog = max(0.0, next_free.get(sw, 0.0) - t)
+        if backlog > 0:
+            queue_delay += backlog
+            queued[sw] = queued.get(sw, 0) + width
+            if backlog > max_depth.get(sw, 0.0):
+                max_depth[sw] = backlog
+        start = t + backlog
+        next_free[sw] = start + width
+        busy[sw] = busy.get(sw, 0.0) + width
+        return start + width
+
+    def node_ready(name: str, t: float) -> None:
+        ready[name] = t
+        for fid in out_flows.get(name, ()):
+            inject(fid, t)
+
+    def inject(fid: int, t: float) -> None:
+        nonlocal edge_hops
+        f = flows[fid]
+        hops = len(f.path) - 1
+        edge_hops += hops
+        if hops == 0:
+            complete(fid, t)
+            return
+        f.remaining = len(f.train)
+        for k in range(len(f.train)):
+            push(t, "pkt", fid, (k, 0))
+
+    def complete(fid: int, t: float) -> None:
+        d = flows[fid].dst
+        arrived[d] = max(arrived.get(d, 0.0), t)
+        pending[d] -= 1
+        if pending[d] == 0:
+            finalize(d, arrived[d])
+
+    def finalize(name: str, t: float) -> None:
+        nonlocal recirc
+        node = program.nodes[name]
+        merges = len(node.srcs) - 1 if isinstance(node, prim.Reduce) else 0
+        if merges > 0:
+            recirc += merges
+            if name in dst_switch:
+                # the stored partial re-enters the destination switch's
+                # pipeline once per extra source: a heap event, so the
+                # recirculated packets contend in time order with transit
+                # traffic at that switch
+                push(t, "recirc", name)
+                return
+            t += merges  # pragma: no cover - reduce with no routed in-edges
+        node_ready(name, t)
+
+    # seed: nodes with no in-flows (Stores) are ready at tick 0, in
+    # deterministic program order
+    for name in program.nodes:
+        if pending[name] == 0:
+            node_ready(name, 0.0)
+
+    while heap:
+        t, _, kind, a, b = heapq.heappop(heap)
+        if kind == "recirc":
+            node = program.nodes[a]
+            merges = len(node.srcs) - 1
+            sw = dst_switch[a]
+            if next_free.get(sw, 0.0) <= t:
+                # serve() counts the recirculated packets as queued only
+                # when the switch is busy; count them here otherwise so
+                # they always appear exactly once
+                queued[sw] = queued.get(sw, 0) + merges
+            node_ready(a, serve(sw, t, merges))
+            continue
+        f = flows[a]
+        k, hop = b
+        w = f.train[k]
+        done = serve(f.path[hop], t, w)
+        packet_hops += w
+        wire_bytes += cm.wire_bytes(w)
+        if hop + 2 == len(f.path):  # crossed the last hop: at dst switch
+            f.last_arrival = max(f.last_arrival, done)
+            f.remaining -= 1
+            if f.remaining == 0:
+                complete(a, f.last_arrival)
+        else:
+            # a super-packet pipelines internally too: its first
+            # constituent packet lands on the next switch one tick after
+            # service starts (the w-tick service there keeps causality),
+            # so coalescing leaves the h + P − 1 arithmetic unchanged
+            push(done - w + 1, "pkt", a, (k, hop + 1))
+
+    undelivered = sorted(name for name, n in pending.items() if n > 0)
+    if undelivered:
+        raise ValueError(
+            f"simulation did not deliver all traffic: {len(undelivered)} node(s) "
+            f"never completed ({', '.join(undelivered[:5])}{'…' if len(undelivered) > 5 else ''}) "
+            "— is the routing table missing edges for this program?"
+        )
+    sinks = program.sinks()
+    makespan = max((ready.get(s, 0.0) for s in sinks), default=0.0)
+    time_s = makespan * cm.tick_s + recirc * cm.recirculation_s
+    total = makespan if makespan > 0 else 1.0
+    return SimReport(
+        edge_hops=edge_hops,
+        packet_hops=packet_hops,
+        recirculations=recirc,
+        makespan_ticks=int(round(makespan)),
+        queue_delay_ticks=int(round(queue_delay)),
+        queued_batches=queued,
+        wire_bytes=wire_bytes,
+        time_s=time_s,
+        switch_busy_ticks={sw: int(round(v)) for sw, v in busy.items()},
+        switch_utilization={sw: v / total for sw, v in busy.items()},
+        max_queue_depth={sw: int(round(v)) for sw, v in max_depth.items()},
+    )
+
+
 class SimulatorBackend:
-    """Hop-by-hop execution of a ``CompiledPlan`` (no devices needed)."""
+    """Streamed execution of a ``CompiledPlan`` (no devices needed)."""
 
     def __init__(self, plan):
         self.plan = plan
@@ -64,107 +278,13 @@ class SimulatorBackend:
     def run(self, inputs: Mapping[str, np.ndarray]) -> SimResult:
         plan = self.plan
         program = plan.program
-        cm = plan.cost_model
-        traffic = cm.traffic(program)
-        route_of = {(r.src_label, r.dst_label): r.path for r in plan.routes.routes}
-
-        values: dict[str, np.ndarray] = {}
-        ready: dict[str, int] = {}  # tick the label's value sits at its switch
-        busy_until: dict[NodeId, int] = {}
-        queued: dict[NodeId, int] = {}
-        edge_hops = packet_hops = recirc = queue_delay = 0
-        wire_bytes = 0.0
-
-        def forward(label: str, dst_label: str) -> int:
-            """Move ``label``'s batch along its route; returns arrival tick."""
-            nonlocal edge_hops, packet_hops, queue_delay, wire_bytes
-            path = route_of[(label, dst_label)]
-            pk = traffic[label].packets
-            t = ready[label]
-            for a in path[:-1]:
-                start = max(t, busy_until.get(a, 0))
-                if start > t:
-                    queue_delay += start - t
-                    queued[a] = queued.get(a, 0) + 1
-                busy_until[a] = start + 1
-                t = start + 1  # one tick to cross the hop
-                edge_hops += 1
-                packet_hops += pk
-                wire_bytes += cm.wire_bytes(pk)
-            return t
-
-        for node in program.toposort():
-            if isinstance(node, prim.Store):
-                if node.name not in inputs:
-                    raise KeyError(
-                        f"missing input for store {node.name!r}: simulate() needs "
-                        f"one array per Store node ({sorted(program.sources())})"
-                    )
-                values[node.name] = np.asarray(inputs[node.name], dtype=np.float64)
-                ready[node.name] = 0
-            elif isinstance(node, prim.MapFn):
-                t = forward(node.src, node.name)
-                import jax.numpy as jnp
-
-                values[node.name] = np.asarray(
-                    prim.MAP_FNS[node.fn_name](jnp.asarray(values[node.src]))
+        for name in program.sources():
+            if isinstance(program.nodes[name], prim.Store) and name not in inputs:
+                raise KeyError(
+                    f"missing input for store {name!r}: simulate() needs "
+                    f"one array per Store node ({sorted(program.sources())})"
                 )
-                ready[node.name] = t
-            elif isinstance(node, prim.KeyBy):
-                # unlowered pass-through; compile with the lower-shuffle pass
-                # to carry per-bucket traffic instead
-                values[node.name] = values[node.src]
-                ready[node.name] = forward(node.src, node.name)
-            elif isinstance(node, prim.ShuffleBucket):
-                # the bucket rides its mapper's switch (usually a 0-hop
-                # edge); the per-bucket traffic travels on the outgoing
-                # bucket→reducer edges, priced by this label's slice width
-                t = forward(node.src, node.name)
-                values[node.name] = values[node.src][..., node.offset : node.offset + node.width]
-                ready[node.name] = t
-            elif isinstance(node, prim.Concat):
-                arrivals = [forward(s, node.name) for s in node.srcs]
-                values[node.name] = np.concatenate([values[s] for s in node.srcs], axis=-1)
-                ready[node.name] = max(arrivals)
-            elif isinstance(node, prim.Reduce):
-                arrivals = []
-                acc = None
-                for s in node.srcs:
-                    arrivals.append(forward(s, node.name))
-                    v = values[s].astype(np.float64)
-                    if acc is None:
-                        acc = v
-                    elif node.kind in (prim.ReduceKind.SUM, prim.ReduceKind.COUNT):
-                        acc = acc + v
-                    elif node.kind is prim.ReduceKind.MAX:
-                        acc = np.maximum(acc, v)
-                    else:
-                        acc = np.minimum(acc, v)
-                merges = len(node.srcs) - 1
-                recirc += merges
-                values[node.name] = acc
-                ready[node.name] = max(arrivals) + merges
-            elif isinstance(node, prim.Collect):
-                values[node.name] = values[node.src]
-                ready[node.name] = forward(node.src, node.name)
-            else:  # pragma: no cover - future node types
-                raise TypeError(type(node))
+        from repro.core.codelet import execute_reference
 
-        sinks = program.sinks()
-        makespan = max((ready[s] for s in sinks), default=0)
-        time_s = (
-            makespan * cm.hop_latency_s
-            + wire_bytes * 8.0 / cm.link_bps
-            + recirc * cm.recirculation_s
-        )
-        report = SimReport(
-            edge_hops=edge_hops,
-            packet_hops=packet_hops,
-            recirculations=recirc,
-            makespan_ticks=makespan,
-            queue_delay_ticks=queue_delay,
-            queued_batches=queued,
-            wire_bytes=wire_bytes,
-            time_s=time_s,
-        )
-        return SimResult(outputs={s: values[s] for s in sinks}, report=report)
+        outputs = execute_reference(program, inputs)
+        return SimResult(outputs=outputs, report=plan.simulate_timing())

@@ -16,7 +16,6 @@ axis can run their own rings (see models/parallel.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Sequence
 
 import jax
@@ -54,7 +53,6 @@ def _group_rank(axis_name, groups):
     idx = lax.axis_index(axis_name)
     if groups is None:
         return idx
-    p = len(groups[0])
     # groups are lists of axis indices; build a lookup table
     table = jnp.zeros((sum(len(g) for g in groups),), dtype=jnp.int32)
     for g in groups:

@@ -14,7 +14,6 @@ recurrence and matches a single-device ``lax.associative_scan`` exactly.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -10,7 +10,7 @@ is the artifact ``codelet.py`` consumes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable
+from typing import Hashable, Mapping
 
 from repro.core import dag
 from repro.core.placement import Placement
@@ -83,7 +83,9 @@ def _load_aware_shortest_path(
     src: NodeId,
     dst: NodeId,
     dist: dict[NodeId, int],
-    link_load: dict[tuple[NodeId, NodeId], int],
+    link_load: dict[tuple[NodeId, NodeId], float],
+    switch_penalty: Mapping[NodeId, float] | None = None,
+    switch_load: Mapping[NodeId, float] | None = None,
 ) -> list[NodeId]:
     """Shortest path that breaks equal-cost ties by current link load.
 
@@ -91,11 +93,20 @@ def _load_aware_shortest_path(
     sends every route between one switch pair down the same links. Instead
     pick each next hop greedily among the distance-decreasing neighbors,
     preferring the least-loaded outgoing link (then the smallest switch id,
-    for determinism) — so two batches between the same endpoints spread
+    for determinism) — so two trains between the same endpoints spread
     over distinct equal-cost paths and contend less in the simulator.
+    ``switch_penalty`` adds a per-switch term to the link key — the
+    ``reroute-feedback`` pass feeds the simulator's *measured* queueing
+    through it, steering ties away from observed hotspots.
+    ``switch_load`` adds the traffic already routed *through* a switch
+    this round (greedy next-hop choice is otherwise blind to load one
+    hop downstream: a heavy train avoids link A→B while walking into the
+    same congested B→C that made A→B bad).
     """
     if src == dst:
         return [src]
+    penalty = switch_penalty or {}
+    transit = switch_load or {}
     path = [src]
     cur = src
     remaining = dist.get(src)
@@ -106,7 +117,10 @@ def _load_aware_shortest_path(
         for v in topo.neighbors(cur):
             if dist.get(v) != remaining - 1:
                 continue
-            key = (link_load.get((cur, v), 0), str(v))
+            key = (
+                link_load.get((cur, v), 0.0) + penalty.get(v, 0.0) + transit.get(v, 0.0),
+                str(v),
+            )
             if best is None or key < best[0]:
                 best = (key, v)
         if best is None:  # inconsistent metric — fall back to the fixed path
@@ -117,11 +131,37 @@ def _load_aware_shortest_path(
     return path
 
 
-def build_routes(program: dag.Program, topo, placement: Placement) -> RoutingTable:
+def build_routes(
+    program: dag.Program,
+    topo,
+    placement: Placement,
+    *,
+    edge_weight: Mapping[str, float] | None = None,
+    switch_penalty: Mapping[NodeId, float] | None = None,
+) -> RoutingTable:
+    """One ``Route`` per DAG edge, spreading equal-cost ties by link load.
+
+    By default every route claims weight 1 on each link it crosses
+    (route-count ECMP, the static first pass). ``edge_weight`` maps a
+    source label to the weight its route adds instead — the
+    ``reroute-feedback`` pass passes per-edge *packet counts* so a hot
+    shuffle bucket claims proportionally more of a link than a cold one.
+    ``switch_penalty`` biases tie-breaks away from given switches (the
+    simulator's measured queueing, normalized below packet scale so
+    traffic weights dominate and penalties only break ties).
+
+    In feedback mode (either keyword given) routed traffic also
+    accumulates per-*switch* transit load consulted by later next-hop
+    choices, so a train sees congestion one hop downstream instead of
+    only on its immediate outgoing link. The static route-count pass
+    keeps the original link-only behavior.
+    """
     routes = []
-    # per-link batch counts accumulated while routing: later edges avoid
-    # links earlier equal-cost edges already claimed (queue-aware ECMP)
-    link_load: dict[tuple[NodeId, NodeId], int] = {}
+    # per-link weights accumulated while routing: later edges avoid links
+    # earlier equal-cost edges already claimed (queue-aware ECMP)
+    link_load: dict[tuple[NodeId, NodeId], float] = {}
+    feedback_mode = edge_weight is not None or switch_penalty is not None
+    switch_load: dict[NodeId, float] = {}
     dist_maps: dict[NodeId, dict[NodeId, int]] = {}  # one BFS per destination
     load_aware = hasattr(topo, "neighbors")
     for node in program:
@@ -132,11 +172,23 @@ def build_routes(program: dag.Program, topo, placement: Placement) -> RoutingTab
                 if dst_sw not in dist_maps:
                     dist_maps[dst_sw] = _dist_to(topo, dst_sw)
                 path = tuple(
-                    _load_aware_shortest_path(topo, src_sw, dst_sw, dist_maps[dst_sw], link_load)
+                    _load_aware_shortest_path(
+                        topo,
+                        src_sw,
+                        dst_sw,
+                        dist_maps[dst_sw],
+                        link_load,
+                        switch_penalty,
+                        switch_load if feedback_mode else None,
+                    )
                 )
             else:
                 path = tuple(topo.shortest_path(src_sw, dst_sw))
+            w = float(edge_weight.get(d, 1.0)) if edge_weight else 1.0
             for a, b in zip(path, path[1:]):
-                link_load[(a, b)] = link_load.get((a, b), 0) + 1
+                link_load[(a, b)] = link_load.get((a, b), 0.0) + w
+            if feedback_mode:
+                for sw in path[1:-1]:
+                    switch_load[sw] = switch_load.get(sw, 0.0) + w
             routes.append(Route(src_label=d, dst_label=node.name, path=path))
     return RoutingTable(routes=routes)

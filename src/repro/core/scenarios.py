@@ -25,15 +25,12 @@ tolerance); tests/test_scenarios.py checks them against each other on an
 from __future__ import annotations
 
 import enum
-import functools
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 
 from repro.core import collectives as coll
-from repro.core import serialization as ser
 
 
 class Scenario(enum.Enum):

@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
 
 E = math.e
 

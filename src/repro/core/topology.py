@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from collections import deque
-from typing import Hashable, Iterable, Mapping, Sequence
+from typing import Hashable, Sequence
 
 NodeId = Hashable
 

@@ -16,7 +16,6 @@ fallback/oracle.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Sequence
 
 import jax

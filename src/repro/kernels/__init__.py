@@ -12,3 +12,12 @@ from repro.kernels.ops import (
     ring_fused_step,
     segment_reduce,
 )
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention",
+    "hash_partition",
+    "ring_fused_step",
+    "segment_reduce",
+]

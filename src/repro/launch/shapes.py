@@ -17,7 +17,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import ModelConfig

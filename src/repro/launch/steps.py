@@ -6,13 +6,11 @@ the p4mr aggregation scenarios run inside. The returned callables are
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core.scenarios import Scenario
 from repro.launch import shapes as shp

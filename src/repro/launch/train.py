@@ -17,13 +17,12 @@ import argparse
 import dataclasses
 import time
 
-import numpy as np
 
 
 def build(cfg, mesh, args):
     import jax
     import jax.numpy as jnp
-    from repro.data.pipeline import Prefetcher, TrainPipeline
+    from repro.data.pipeline import TrainPipeline
     from repro.launch import steps as steps_lib
     from repro.models.common import init_params
 
@@ -45,9 +44,6 @@ def init_or_restore(cfg, mesh, bundle, store, args):
     if store is not None and store.latest_step() is not None and not args.fresh:
         p_sds = tree_specs_to_shapes(bundle["param_leafspecs"], jnp.dtype(cfg.param_dtype))
         st_sds = jax.eval_shape(bundle["init_state"], p_sds)
-        st_shard = jax.tree_util.tree_map(
-            lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
-            st_sds)  # simple: replicate moments on restore, re-shard lazily
         tpl = {"params": p_sds, "opt": st_sds}
         tree, manifest = store.restore(tpl)
         params = jax.tree_util.tree_map(

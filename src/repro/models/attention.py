@@ -17,7 +17,6 @@ Local (sliding-window) attention scans a static band of kv-chunks.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -11,12 +11,10 @@ about layout.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, Mapping
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models.common import LeafSpec, ModelConfig
-from repro.models.parallel import ShardEnv, col_parallel, fetch_weight, row_parallel
+from repro.models.parallel import ShardEnv, col_parallel, row_parallel
 
 
 def rms_norm(x, scale, eps: float = 1e-5):

@@ -13,9 +13,6 @@ are squeezed away.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
 from typing import Any
 
 import jax

@@ -19,7 +19,6 @@ the replica by token index for balance.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ grok-1's fp32 moments fit a 256-chip pod (see DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax

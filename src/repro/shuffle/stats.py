@@ -27,6 +27,10 @@ class ShuffleStats:
     bucket_switch: dict[int, NodeId]  # bucket -> reducer switch
     residency_by_switch: dict[NodeId, int]  # switch -> per-bucket reducer state bytes
     total_wire_bytes: float
+    # streamed timing of the whole plan (per-packet simulator): skew-induced
+    # queueing shows up here, not in the static wire-byte split
+    streamed_makespan_ticks: int = 0
+    streamed_queue_delay_ticks: int = 0
 
     @property
     def max_switch_residency_bytes(self) -> int:
@@ -96,6 +100,7 @@ def plan_shuffle(plan) -> ShuffleStats | None:
         if not any(resolve(c) == b for c in program.consumers(n.name)):
             bucket_switch.setdefault(b, sw)
 
+    streamed = plan.simulate_timing()
     return ShuffleStats(
         num_buckets=max(n.num_buckets for n in buckets),
         bucket_items=dict(sorted(bucket_items.items())),
@@ -103,6 +108,8 @@ def plan_shuffle(plan) -> ShuffleStats | None:
         bucket_switch=dict(sorted(bucket_switch.items())),
         residency_by_switch=residency,
         total_wire_bytes=sum(bucket_wire.values()),
+        streamed_makespan_ticks=streamed.makespan_ticks,
+        streamed_queue_delay_ticks=streamed.queue_delay_ticks,
     )
 
 
@@ -133,20 +140,26 @@ def arbitrate_buckets(
     cost_model=None,
     pins=None,
     passes=None,
+    objective: str = "streamed",
 ):
     """Compile one plan per candidate bucket count, keep the cheapest.
 
     The same move as ``compiler.compile_best``'s chain-vs-tree arbitration,
-    applied to the shuffle's fan-out degree: the §3 cost model prices each
-    bucket count's plan (per-packet header overhead vs state concentration)
-    and the min-cost plan wins. ``program_or_factory`` is either a Program
-    whose KeyBys are rewritten per candidate, or a callable
-    ``(num_buckets) -> Program``.
+    applied to the shuffle's fan-out degree. With the default
+    ``objective="streamed"`` each candidate is priced by its *streamed*
+    makespan (the per-packet simulator's completion time, which sees
+    skew-induced queueing and recirculation hotspots), tie-broken by the
+    static §3 cost; ``objective="static"`` keeps the old analytic-only
+    scoring (cheaper: no simulate round per candidate).
+    ``program_or_factory`` is either a Program whose KeyBys are rewritten
+    per candidate, or a callable ``(num_buckets) -> Program``.
     """
     from repro import compiler
 
     if not candidates:
         raise ValueError("need at least one candidate bucket count")
+    if objective not in ("streamed", "static"):
+        raise ValueError(f"unknown objective {objective!r} (streamed or static)")
     make: Callable[[int], dag.Program]
     if callable(program_or_factory):
         make = program_or_factory
@@ -163,4 +176,6 @@ def arbitrate_buckets(
                 passes=passes,
             )
         )
-    return min(plans, key=lambda pl: pl.cost.scalar)
+    if objective == "static":
+        return min(plans, key=lambda pl: pl.cost.scalar)
+    return min(plans, key=lambda pl: (pl.simulate_timing().time_s, pl.cost.scalar))

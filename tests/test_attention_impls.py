@@ -47,7 +47,6 @@ def test_pair_schedules_counts():
 def test_mla_absorbed_decode_matches_expanded_prefill():
     """Decoding token t with the latent-space (absorbed) path must match
     position t of an expanded-attention prefill over the same sequence."""
-    import dataclasses
 
     from repro.configs import get_smoke_config
     from repro.launch.mesh import make_mesh

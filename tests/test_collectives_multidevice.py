@@ -2,7 +2,6 @@
 
 These spawn subprocesses so the main pytest process keeps 1 device.
 """
-import pytest
 
 
 def test_ring_and_tree_collectives(multidevice):

@@ -1,6 +1,5 @@
 """Optimizer (incl. 8-bit moments), checkpoint roundtrip + resharding,
 fault-tolerance policies, data-pipeline determinism."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,4 @@
 """In-transit cross-device scan == single-device associative scan."""
-import numpy as np
-from hypothesis import given, settings, strategies as st
 
 
 def test_sequence_parallel_scan_matches_reference(multidevice):

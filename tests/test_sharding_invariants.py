@@ -1,6 +1,5 @@
 """Property tests on the sharding algebra (ShardEnv groups/maps/layouts)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.common import LeafSpec

@@ -1,7 +1,5 @@
 """End-to-end integration: the train driver learns, checkpoints, restarts
 elastically; MoE a2a dispatch matches the replicated reference."""
-import numpy as np
-import pytest
 
 
 def test_train_loss_decreases_and_elastic_restart(multidevice, tmp_path):
