@@ -1,0 +1,144 @@
+"""Autotune benchmark: static vs feedback vs autotuned streamed makespans.
+
+For each skewed shuffle cell the word-count program is compiled three
+ways — static route-count ECMP (``STATIC_ECMP_PASSES``), the full
+pipeline whose ``reroute-feedback`` pass already re-routes on measured
+queueing (``DEFAULT_PASSES``), and that feedback plan hill-climbed by
+``repro.autotune`` (reroute detours, reducer moves, rebucket, learned
+reweight). The tuned plan must never lose to the feedback plan it starts
+from, and on the skewed cells it should win by >=10% — the per-action
+attribution in each record's ``tuning`` block says which mutation bought
+the ticks. Simulator outputs are checked against the numpy reference on
+every cell: tuning must never change values.
+
+Writes a BENCH_autotune.json artifact; CI's bench-smoke job gates the
+simulated metrics at >10% regression (``benchmarks/check_regression.py``)
+and prints the accepted-action summary (``--summary``).
+
+    PYTHONPATH=src:. python benchmarks/run.py autotune
+    PYTHONPATH=src:. python benchmarks/bench_autotune.py --summary
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+# cell scaffolding (topologies, skew weights, seeded inputs, sizes) is
+# bench_shuffle's: the static/feedback columns of the two BENCH jsons must
+# stay comparable cell for cell
+from benchmarks.bench_shuffle import N_MAPPERS, VOCAB, _topologies, _weights, case_inputs
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_autotune.json")
+
+TUNE_ROUNDS = 6
+# (topology key, num_buckets, skew): the skewed fat-tree/torus cells where
+# feedback routing alone leaves queueing on the table, plus one uniform
+# control cell where the tuner should find (almost) nothing
+CASES = (
+    ("fat_tree_k4", 8, 2.0),
+    ("fat_tree_k4", 4, 1.0),
+    ("torus_4x4", 8, 2.0),
+    ("torus_4x4", 8, 0.0),
+)
+
+
+def _topology(name: str):
+    for topo_name, topo, hosts, sink in _topologies():
+        if topo_name == name:
+            return topo, hosts, sink
+    raise KeyError(f"unknown benchmark topology {name!r}")
+
+
+def _case(topo_name: str, num_buckets: int, skew: float) -> dict:
+    from repro import autotune, compiler
+    from repro.core import wordcount
+
+    topo, hosts, sink = _topology(topo_name)
+    prog = wordcount.wordcount_shuffle_program(
+        N_MAPPERS, VOCAB, num_buckets=num_buckets,
+        weights=_weights(num_buckets, skew), hosts=hosts, sink_host=sink,
+    )
+    static = compiler.compile(prog, topo, passes=compiler.STATIC_ECMP_PASSES)
+    feedback = compiler.compile(prog, topo)
+    t0 = time.perf_counter()
+    tuned = autotune.tune(feedback, rounds=TUNE_ROUNDS)
+    tune_us = (time.perf_counter() - t0) * 1e6
+
+    inputs = case_inputs(num_buckets, skew)
+    sim = tuned.simulate(inputs)
+    ref = np.sum([inputs[f"s{i}"] for i in range(N_MAPPERS)], axis=0)
+    np.testing.assert_array_equal(sim.outputs["OUT"], ref)  # tuning is exact
+
+    rep_s = static.simulate_timing()
+    rep_f = feedback.simulate_timing()
+    rep_t = sim.report
+    report = tuned.tuning
+    return {
+        "name": f"autotune.{topo_name}.b{num_buckets}.skew{skew}",
+        "topology": topo_name,
+        "num_buckets": num_buckets,
+        "skew": skew,
+        "tune_us": round(tune_us, 1),
+        # the three-way headline: static ECMP vs feedback-routed vs tuned
+        "sim_time_us": round(rep_t.time_s * 1e6, 3),
+        "sim_time_us_feedback": round(rep_f.time_s * 1e6, 3),
+        "sim_time_us_static": round(rep_s.time_s * 1e6, 3),
+        "makespan_ticks": rep_t.makespan_ticks,
+        "makespan_ticks_feedback": rep_f.makespan_ticks,
+        "makespan_ticks_static": rep_s.makespan_ticks,
+        "queue_delay_ticks": rep_t.queue_delay_ticks,
+        "wire_bytes": round(rep_t.wire_bytes, 1),
+        "improvement_pct_vs_feedback": round(report.improvement_pct, 2),
+        "actions_evaluated": len(report.actions),
+        "accepted_by_kind": report.accepted_by_kind(),
+        "tuning": report.to_dict(),
+    }
+
+
+def run() -> list[tuple[str, float, str]]:
+    records = [_case(*case) for case in CASES]
+    with open(OUT_PATH, "w") as f:
+        json.dump(records, f, indent=2)
+
+    rows = []
+    for r in records:
+        accepted = ", ".join(
+            f"{k}×{n}" for k, n in sorted(r["accepted_by_kind"].items())
+        ) or "none"
+        rows.append((
+            r["name"],
+            r["sim_time_us"],
+            f"static={r['makespan_ticks_static']}t feedback={r['makespan_ticks_feedback']}t "
+            f"tuned={r['makespan_ticks']}t ({r['improvement_pct_vs_feedback']:+.1f}% vs "
+            f"feedback) accepted=[{accepted}]",
+        ))
+    rows.append(("autotune.artifact", 0.0, f"wrote {os.path.basename(OUT_PATH)}"))
+    return rows
+
+
+def print_summary(path: str = OUT_PATH) -> None:
+    """Accepted-action summary of a BENCH_autotune.json (CI job log)."""
+    with open(path) as f:
+        records = json.load(f)
+    for r in records:
+        print(f"{r['name']}: feedback={r['makespan_ticks_feedback']}t "
+              f"tuned={r['makespan_ticks']}t ({r['improvement_pct_vs_feedback']:+.1f}%)")
+        accepted = [a for a in r["tuning"]["actions"] if a["accepted"]]
+        if not accepted:
+            print("  no action accepted (feedback plan already at a local optimum)")
+        for a in accepted:
+            print(f"  round {a['round']} [{a['kind']}] {a['detail']}: "
+                  f"{a['time_s_before'] * 1e6:.1f}us -> {a['time_s_after'] * 1e6:.1f}us")
+
+
+if __name__ == "__main__":
+    if "--summary" in sys.argv:
+        print_summary()
+    else:
+        for row, us, derived in run():
+            print(f"{row},{us:.2f},{derived}")

@@ -49,6 +49,16 @@ def _topologies():
     yield "torus_4x4", torus, [f"d{2 * i}" for i in range(N_MAPPERS)], "d15"
 
 
+def case_inputs(num_buckets: int, skew: float) -> dict:
+    """Deterministic per-cell mapper histograms (shared with
+    bench_autotune so the two BENCH jsons stay cell-comparable)."""
+    rs = np.random.RandomState(num_buckets * 7 + int(skew * 3))
+    return {
+        f"s{i}": rs.randint(0, 50, size=(VOCAB,)).astype(np.float64)
+        for i in range(N_MAPPERS)
+    }
+
+
 def _case(topo_name, topo, hosts, sink, num_buckets, skew) -> dict:
     prog = wordcount.wordcount_shuffle_program(
         N_MAPPERS, VOCAB, num_buckets=num_buckets,
@@ -58,11 +68,7 @@ def _case(topo_name, topo, hosts, sink, num_buckets, skew) -> dict:
     t0 = time.perf_counter()
     plan = compiler.compile(prog, topo)  # full pipeline incl. reroute-feedback
     compile_us = (time.perf_counter() - t0) * 1e6
-    rs = np.random.RandomState(num_buckets * 7 + int(skew * 3))
-    inputs = {
-        f"s{i}": rs.randint(0, 50, size=(VOCAB,)).astype(np.float64)
-        for i in range(N_MAPPERS)
-    }
+    inputs = case_inputs(num_buckets, skew)
     sim = plan.simulate(inputs)
     sim_static = static.simulate_timing()
     stats = shuffle.plan_shuffle(plan)

@@ -27,6 +27,7 @@ import sys
 GATED_METRICS = (
     "sim_time_us",
     "sim_time_us_static",
+    "sim_time_us_feedback",
     "sim_time_best_us",
     "sim_time_flat_us",
     "makespan_ticks",

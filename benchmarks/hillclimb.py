@@ -13,6 +13,13 @@ Three cells (chosen from the baseline roofline table):
   H3 granite-moe-1b-a400m/train_4k — worst roofline fraction: triangle
      attention + flash memory accounting + microbatch tuning.
 
+The climb itself is ``repro.autotune.search.hill_climb`` — the same
+greedy accept-if-better driver the plan autotuner uses — walking a fixed
+per-cell ladder of variants (``stop_when_stuck=False``: every rung is
+measured and logged even when it does not win) against the modelled
+step-time bound max(t_compute, t_memory, t_collective); a rejected rung's
+settings are not carried into later rungs.
+
 Each iteration records the full three-term roofline; the flash-attention
 variant additionally swaps the measured quadratic (score-materialization)
 HBM bytes for the Pallas kernel's true working-set traffic, extracted by a
@@ -97,6 +104,96 @@ def run_variant(arch, shape_name, *, scenario="native", impl="masked",
     return rec
 
 
+# Per-cell variant ladders for the shared hill-climb driver. Each rung is
+# one round of candidates: (label, settings delta vs the incumbent). The
+# first H1 rung offers the whole S2/S3/native scenario alternative set at
+# once (steepest descent picks the best aggregation strategy); later
+# rungs stack one hypothesis each.
+LADDERS = [
+    ("qwen1.5-0.5b", "train_4k",
+     ("H1.0 S1 endpoint (paper baseline-of-baselines)", {"scenario": "s1_host"}),
+     [
+         [("H1.1 S2 in-transit ring (paper-faithful)", {"scenario": "s2_in_net"}),
+          ("H1.2 S3 ring + bf16 wire (paper-faithful)", {"scenario": "s3_in_net_map"}),
+          ("H1.3 native psum (beyond paper)", {"scenario": "native"})],
+         [("H1.4 + triangle-causal attention", {"impl": "triangle"})],
+         [("H1.5 + pallas flash attention (memory accounting)", {"flash": True})],
+         # tp=16 over-shards a 0.5B model: TP activation psums dominate the
+         # collective term. Right-size to tp=4 and spend the freed
+         # model-axis factor as extra data parallelism (rep-groups split).
+         [("H1.6 + right-size tp 16->4 (rep as DP)", {"overrides": {"tp": 4}})],
+         [("H1.7 best layout, paper-faithful S2 ring", {"scenario": "s2_in_net"})],
+     ]),
+    ("grok-1-314b", "decode_32k",
+     ("H2.0 baseline (weight gather)", {}),
+     [
+         [("H2.1 compute-at-data serving", {"impl": "serve_opt"})],
+     ]),
+    ("granite-moe-1b-a400m", "train_4k",
+     ("H3.0 baseline", {}),
+     [
+         [("H3.1 + triangle-causal attention", {"impl": "triangle"})],
+         [("H3.2 + flash attention memory", {"flash": True})],
+         [("H3.3 + microbatches 2->1", {"microbatches": 1})],
+         [("H3.4 + right-size tp 16->8 (4 experts/rank)", {"overrides": {"tp": 8}})],
+     ]),
+]
+
+
+def _merge(settings: dict, delta: dict) -> dict:
+    merged = {**settings, **delta}
+    if "overrides" in settings or "overrides" in delta:
+        merged["overrides"] = {**(settings.get("overrides") or {}),
+                               **(delta.get("overrides") or {})}
+    return merged
+
+
+def _step_bound(rec: dict) -> float:
+    """Objective: the modelled per-step time bound (lower is better)."""
+    terms = [rec.get("t_compute_s"), rec.get("t_memory_s"), rec.get("t_collective_s")]
+    terms = [t for t in terms if t is not None]
+    return max(terms) if terms else float("inf")
+
+
+def climb_cell(arch, shape_name, base, ladder, log):
+    """Walk one cell's ladder with the shared autotune hill-climb."""
+    from repro.autotune import search
+
+    def measure(label, settings):
+        rec = run_variant(arch, shape_name, label=label, **settings)
+        # greedy acceptance means a rung can be measured WITHOUT a rejected
+        # earlier rung's delta — the label narrates the ladder, this field
+        # records what actually ran
+        rec["settings"] = settings
+        return settings, rec
+
+    base_label, base_delta = base
+    state = measure(base_label, _merge({}, base_delta))
+    log(state[1])
+
+    def propose(st, rnd):
+        return [
+            search.Candidate(
+                kind="variant",
+                detail=label,
+                build=lambda label=label, delta=delta, st=st: measure(
+                    label, _merge(st[0], delta)
+                ),
+            )
+            for label, delta in ladder[rnd - 1]
+        ]
+
+    best, _, _ = search.hill_climb(
+        state,
+        objective=lambda st: _step_bound(st[1]),
+        propose=propose,
+        rounds=len(ladder),
+        on_eval=lambda _rec, st: log(st[1]),
+        stop_when_stuck=False,  # measure every rung, accept only winners
+    )
+    return best
+
+
 def main():
     out = []
 
@@ -108,44 +205,8 @@ def main():
         with open("results_hillclimb.json", "w") as f:
             json.dump(out, f, indent=1)
 
-    # ---------------- H1: qwen1.5-0.5b train_4k — the paper ladder --------
-    for sc, lbl in [("s1_host", "H1.0 S1 endpoint (paper baseline-of-baselines)"),
-                    ("s2_in_net", "H1.1 S2 in-transit ring (paper-faithful)"),
-                    ("s3_in_net_map", "H1.2 S3 ring + bf16 wire (paper-faithful)"),
-                    ("native", "H1.3 native psum (beyond paper)")]:
-        log(run_variant("qwen1.5-0.5b", "train_4k", scenario=sc, label=lbl))
-    log(run_variant("qwen1.5-0.5b", "train_4k", scenario="native",
-                    impl="triangle", label="H1.4 + triangle-causal attention"))
-    log(run_variant("qwen1.5-0.5b", "train_4k", scenario="native",
-                    impl="triangle", flash=True,
-                    label="H1.5 + pallas flash attention (memory accounting)"))
-    # tp=16 over-shards a 0.5B model: TP activation psums dominate the
-    # collective term. Right-size to tp=4 and spend the freed model-axis
-    # factor as extra data parallelism (rep-groups batch split).
-    log(run_variant("qwen1.5-0.5b", "train_4k", scenario="native",
-                    impl="triangle", flash=True, overrides={"tp": 4},
-                    label="H1.6 + right-size tp 16->4 (rep as DP)"))
-    log(run_variant("qwen1.5-0.5b", "train_4k", scenario="s2_in_net",
-                    impl="triangle", flash=True, overrides={"tp": 4},
-                    label="H1.7 best layout, paper-faithful S2 ring"))
-
-    # ---------------- H2: grok decode — compute at data -------------------
-    log(run_variant("grok-1-314b", "decode_32k", label="H2.0 baseline (weight gather)"))
-    log(run_variant("grok-1-314b", "decode_32k", impl="serve_opt",
-                    label="H2.1 compute-at-data serving"))
-
-    # ---------------- H3: granite-moe train — worst fraction --------------
-    log(run_variant("granite-moe-1b-a400m", "train_4k", label="H3.0 baseline"))
-    log(run_variant("granite-moe-1b-a400m", "train_4k", impl="triangle",
-                    label="H3.1 + triangle-causal attention"))
-    log(run_variant("granite-moe-1b-a400m", "train_4k", impl="triangle",
-                    flash=True, label="H3.2 + flash attention memory"))
-    log(run_variant("granite-moe-1b-a400m", "train_4k", impl="triangle",
-                    flash=True, microbatches=1,
-                    label="H3.3 + microbatches 2->1"))
-    log(run_variant("granite-moe-1b-a400m", "train_4k", impl="triangle",
-                    flash=True, microbatches=1, overrides={"tp": 8},
-                    label="H3.4 + right-size tp 16->8 (4 experts/rank)"))
+    for arch, shape_name, base, ladder in LADDERS:
+        climb_cell(arch, shape_name, base, ladder, log)
 
     print(f"\n{len(out)} variants -> results_hillclimb.json")
 

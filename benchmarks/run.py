@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   bench_scenarios       — Fig 4 & 5 (S1/S2/S3 JCT speed-ups)
   bench_compile         — pass pipeline: compile+simulate time, opt vs flat
   bench_shuffle         — KeyBy fan-out: num_buckets × skew on fat-tree/torus
+  bench_autotune        — static vs feedback vs autotuned makespans
   bench_collectives     — in-transit vs endpoint aggregation (TPU form)
   bench_kernels         — Pallas kernel oracles + allclose
   bench_roofline        — §Roofline aggregation of the dry-run sweeps
@@ -23,6 +24,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    bench_autotune,
     bench_collectives,
     bench_compile,
     bench_cpu_map_reduce,
@@ -39,6 +41,7 @@ MODULES = [
     ("scenarios", bench_scenarios),
     ("compile", bench_compile),
     ("shuffle", bench_shuffle),
+    ("autotune", bench_autotune),
     ("collectives", bench_collectives),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),

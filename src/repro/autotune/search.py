@@ -1,0 +1,110 @@
+"""Greedy hill-climb search driver — the repo's one hill-climb loop.
+
+``hill_climb`` is deliberately domain-free: a state, an objective to
+minimize, and a proposer that emits lazily-built candidate mutations per
+round. ``repro.autotune.tune`` drives it with ``CompiledPlan`` states and
+the streamed makespan; ``benchmarks/hillclimb.py`` drives it with
+roofline dry-run cells and the modelled step-time bound. Both get the
+same guarantees:
+
+* **never worse than the input** — a candidate is accepted only when its
+  objective is strictly below the incumbent's, so the returned state is
+  the input state whenever nothing improves;
+* **budgeted** — at most ``rounds`` accept rounds, each evaluating every
+  proposed candidate (steepest-descent: the best improving candidate of
+  the round wins, not the first);
+* **auditable** — every evaluation is recorded (kind, detail, scores,
+  accepted/skipped), which is what ``TuningReport`` is built from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable
+
+
+class SkipCandidate(Exception):
+    """Raised by a candidate's ``build`` when the mutation is infeasible
+    (e.g. a moved reducer overflows the target switch's memory budget);
+    recorded as skipped, never fatal."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One proposed mutation: ``build()`` materializes the mutated state
+    (lazily — proposal must stay cheap, evaluation pays the cost)."""
+
+    kind: str  # action family, e.g. "reroute" / "move-reducer"
+    detail: str  # human-readable description of the mutation
+    build: Callable[[], Any]
+
+
+@dataclasses.dataclass
+class EvalRecord:
+    """One candidate evaluation inside ``hill_climb``."""
+
+    round: int
+    kind: str
+    detail: str
+    score_before: float  # incumbent objective when evaluated
+    score: float | None  # candidate objective; None when build() skipped
+    accepted: bool = False
+    note: str = ""
+
+
+def hill_climb(
+    state: Any,
+    *,
+    objective: Callable[[Any], float],
+    propose: Callable[[Any, int], Iterable[Candidate]],
+    rounds: int,
+    min_gain: float = 0.0,
+    on_eval: Callable[[EvalRecord, Any], None] | None = None,
+    stop_when_stuck: bool = True,
+) -> tuple[Any, float, list[EvalRecord]]:
+    """Steepest-descent hill-climb; returns (best state, score, records).
+
+    Each round evaluates every candidate from ``propose(best, round)`` and
+    accepts the lowest-objective one that beats the incumbent by more than
+    ``min_gain`` (a relative fraction); the search stops early when a
+    round proposes nothing or — unless ``stop_when_stuck=False``, for
+    fixed ladders whose every rung must be measured (the roofline
+    hillclimb bench) — improves nothing. ``on_eval`` observes each
+    successfully built candidate with its record (benchmarks log here).
+    """
+    if rounds < 0:
+        raise ValueError(f"rounds must be >= 0, got {rounds}")
+    best = state
+    best_score = float(objective(state))
+    records: list[EvalRecord] = []
+    for rnd in range(1, rounds + 1):
+        candidates = list(propose(best, rnd))
+        if not candidates:
+            break
+        bar = best_score - abs(best_score) * min_gain
+        round_best: tuple[float, EvalRecord, Any] | None = None
+        for cand in candidates:
+            rec = EvalRecord(
+                round=rnd,
+                kind=cand.kind,
+                detail=cand.detail,
+                score_before=best_score,
+                score=None,
+            )
+            records.append(rec)
+            try:
+                nxt = cand.build()
+            except SkipCandidate as e:
+                rec.note = str(e) or "infeasible"
+                continue
+            rec.score = float(objective(nxt))
+            if on_eval is not None:
+                on_eval(rec, nxt)
+            if rec.score < bar and (round_best is None or rec.score < round_best[0]):
+                round_best = (rec.score, rec, nxt)
+        if round_best is None:
+            if stop_when_stuck:
+                break
+            continue
+        best_score, rec, best = round_best
+        rec.accepted = True
+    return best, best_score, records

@@ -14,6 +14,7 @@ pass over a shared ``CompileCtx``; see ``driver.py``.
 """
 from repro.compiler.cost import CostModel, PlanCost, Traffic
 from repro.compiler.driver import (
+    AUTOTUNE_PASSES,
     DEFAULT_PASSES,
     STATIC_ECMP_PASSES,
     UNOPTIMIZED_PASSES,
@@ -38,6 +39,7 @@ __all__ = [
     "PlanCost",
     "Traffic",
     "compile_best",
+    "AUTOTUNE_PASSES",
     "DEFAULT_PASSES",
     "STATIC_ECMP_PASSES",
     "UNOPTIMIZED_PASSES",

@@ -66,6 +66,8 @@ def _ensure_builtin_passes() -> None:
         import repro.compiler.passes  # noqa: F401
     if "lower-shuffle" not in _PASS_REGISTRY:
         import repro.shuffle.lower  # noqa: F401
+    if "autotune" not in _PASS_REGISTRY:
+        import repro.autotune  # noqa: F401
 
 
 # The full optimizing pipeline and the paper-faithful flat baseline.
@@ -88,6 +90,12 @@ STATIC_ECMP_PASSES: tuple[str, ...] = tuple(
     p for p in DEFAULT_PASSES if p != "reroute-feedback"
 )
 UNOPTIMIZED_PASSES: tuple[str, ...] = ("parse", "validate", "place", "route", "emit")
+# DEFAULT_PASSES plus the profile-guided autotune search (repro.autotune):
+# the emitted plan is hill-climbed against the streaming simulator —
+# reroute (k-shortest-path detours), move-reducer, rebucket, reweight.
+# Opt-in: each candidate action costs a simulate round, so this pipeline
+# is for plans that will run long enough to amortize the search.
+AUTOTUNE_PASSES: tuple[str, ...] = DEFAULT_PASSES + ("autotune",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,7 +119,12 @@ class CompileCtx:
     source: str | None = None
     ast: list | None = None
     program: dag.Program | None = None
+    # snapshot of ``program`` as parsed, before any optimization pass
+    # rewrote it (the 'parse' pass fills this; emit hands it to the plan)
+    source_program: dag.Program | None = None
     pins: dict[str, NodeId] = dataclasses.field(default_factory=dict)
+    # the caller's pins only — ``pins`` accumulates pass-created ones
+    user_pins: dict[str, NodeId] = dataclasses.field(default_factory=dict)
     placement: Placement | None = None
     routes: RoutingTable | None = None
     plan: CompiledPlan | None = None
@@ -168,6 +181,7 @@ def compile(
         topology=topology,
         cost_model=cost_model or CostModel(),
         pins=dict(pins or {}),
+        user_pins=dict(pins or {}),
         options=dict(options or {}),
     )
     if isinstance(src_or_program, dag.Program):
@@ -198,6 +212,8 @@ def compile_best(
     pipelines: Sequence[Sequence[str | PassFn]] = (DEFAULT_PASSES, UNOPTIMIZED_PASSES),
     cost_model: CostModel | None = None,
     pins: dict[str, NodeId] | None = None,
+    autotune: bool = False,
+    objective: str | None = None,
 ) -> CompiledPlan:
     """Compile under each candidate pipeline, keep the cheapest plan.
 
@@ -206,11 +222,24 @@ def compile_best(
     depth, and which wins depends on payload width and topology. Rather
     than guess, let the §3 cost model arbitrate — the same move as
     profile-guided pass selection in a conventional compiler.
+
+    ``autotune=True`` adds ``AUTOTUNE_PASSES`` to the candidate set (the
+    full pipeline plus the profile-guided hill-climb) and, unless
+    ``objective`` says otherwise, switches the arbitration to the
+    ``"streamed"`` makespan — the quantity autotuning optimizes; the
+    static ``cost.scalar`` cannot see what a deliberate detour buys.
     """
     if not pipelines:
         raise ValueError("need at least one candidate pipeline")
+    if autotune and AUTOTUNE_PASSES not in tuple(tuple(p) for p in pipelines):
+        pipelines = (*pipelines, AUTOTUNE_PASSES)
+    objective = objective or ("streamed" if autotune else "static")
+    if objective not in ("static", "streamed"):
+        raise ValueError(f"unknown objective {objective!r} (static or streamed)")
     plans = [
         compile(src_or_program, topology, passes=p, cost_model=cost_model, pins=pins)
         for p in pipelines
     ]
+    if objective == "streamed":
+        return min(plans, key=lambda pl: (pl.simulate_timing().time_s, pl.cost.scalar))
     return min(plans, key=lambda pl: pl.cost.scalar)

@@ -38,6 +38,18 @@ class CompiledPlan:
     # reroute-feedback stats (rounds, converged, static vs feedback
     # makespan) when that pass ran; None otherwise
     feedback: dict | None = None
+    # the program as handed to the compiler, before any optimization pass
+    # rewrote it — what the autotune rebucket/reweight actions recompile
+    # from (a lowered program cannot be re-lowered at a new bucket count)
+    source_program: dag.Program | None = None
+    # caller-supplied placement constraints only (pass-accumulated pins
+    # live in ``pins``); recompiles must not bake lowering pins back in
+    user_pins: dict[str, NodeId] = dataclasses.field(default_factory=dict)
+    # lower-shuffle metadata: reduce label -> {num_buckets, widths,
+    # keybys, bucket_reducers, bucket_switch}; None when nothing lowered
+    shuffle_meta: dict | None = None
+    # TuningReport when repro.autotune produced this plan; None otherwise
+    tuning: Any = None
 
     # ------------------------------------------------------------ backends --
     def jax_step(self, *, axis_name: str = "all", item_dtype=None):

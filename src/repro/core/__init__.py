@@ -15,11 +15,12 @@ from repro.core.codelet import compile_program, execute_reference
 from repro.core.dag import Program, ProgramError, paper_example
 from repro.core.dsl import PAPER_SOURCE, compile_source, parse_ast, program_to_source
 from repro.core.placement import Placement, PlacementError, place
-from repro.core.routing import RoutingTable, build_routes
+from repro.core.routing import RoutingTable, build_routes, k_shortest_paths
 from repro.core.scenarios import (
     Scenario,
     aggregate,
     compile_scenario,
+    plan_ring_order,
     scenario_program,
     simulated_scenario_time,
     wire_bytes_per_device,
@@ -47,8 +48,9 @@ __all__ = [
     "Program", "ProgramError", "paper_example",
     "PAPER_SOURCE", "compile_source", "parse_ast", "program_to_source",
     "Placement", "PlacementError", "place",
-    "RoutingTable", "build_routes",
-    "Scenario", "aggregate", "compile_scenario", "scenario_program",
+    "RoutingTable", "build_routes", "k_shortest_paths",
+    "Scenario", "aggregate", "compile_scenario", "plan_ring_order",
+    "scenario_program",
     "simulated_scenario_time", "wire_bytes_per_device",
     "SwitchTopology", "TorusTopology", "fat_tree_topology", "paper_topology",
     "production_torus",

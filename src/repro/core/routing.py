@@ -10,6 +10,7 @@ is the artifact ``codelet.py`` consumes.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Hashable, Mapping
 
 from repro.core import dag
@@ -76,6 +77,99 @@ def _dist_to(topo, dst: NodeId) -> dict[NodeId, int]:
                 dist[v] = dist[u] + 1
                 q.append(v)
     return dist
+
+
+def _bfs_path(
+    topo,
+    src: NodeId,
+    dst: NodeId,
+    banned_nodes: frozenset | set,
+    banned_links: set,
+) -> list[NodeId] | None:
+    """Deterministic BFS shortest path avoiding ``banned_nodes`` and the
+    directed ``banned_links``; None when ``dst`` is unreachable. Neighbor
+    order is fixed by switch id so ties resolve identically across runs."""
+    from collections import deque
+
+    if src == dst:
+        return [src]
+    prev: dict[NodeId, NodeId] = {src: src}
+    q = deque([src])
+    while q:
+        u = q.popleft()
+        for v in sorted(topo.neighbors(u), key=str):
+            if v in prev or v in banned_nodes or (u, v) in banned_links:
+                continue
+            prev[v] = u
+            if v == dst:
+                path = [v]
+                while path[-1] != src:
+                    path.append(prev[path[-1]])
+                return path[::-1]
+            q.append(v)
+    return None
+
+
+def k_shortest_paths(
+    topo,
+    src: NodeId,
+    dst: NodeId,
+    max_paths: int,
+    *,
+    max_stretch: int | None = None,
+) -> list[tuple[NodeId, ...]]:
+    """Up to ``max_paths`` loop-free paths ``src → dst``, shortest first.
+
+    Yen's algorithm over the undirected switch graph: candidate k+1-th
+    paths branch off each spur node of the k-th path with the already-used
+    continuations banned, so every returned path is simple (no repeated
+    switch) and the list is sorted by hop count (ties broken by switch-id
+    sequence, deterministically). This is the detour candidate generator
+    the ``autotune.reroute`` action prices by streamed makespan — unlike
+    the ECMP tie-break, it may propose strictly *longer* paths, which
+    measured queueing can justify.
+
+    ``max_stretch`` drops paths more than that many hops longer than the
+    shortest. Topologies without a ``neighbors`` method fall back to the
+    single fixed ``shortest_path`` (same degradation as ``build_routes``).
+    """
+    if max_paths < 1:
+        raise ValueError(f"max_paths must be >= 1, got {max_paths}")
+    if not hasattr(topo, "neighbors"):
+        return [tuple(topo.shortest_path(src, dst))]
+    first = _bfs_path(topo, src, dst, frozenset(), set())
+    if first is None:
+        raise ValueError(f"no path {src} -> {dst}")
+    shortest_hops = len(first) - 1
+    paths: list[list[NodeId]] = [first]
+    # candidate heap ordered by (hops, id-sequence) for deterministic pops
+    candidates: list[tuple[int, tuple[str, ...], list[NodeId]]] = []
+    seen = {tuple(first)}
+    while len(paths) < max_paths:
+        prev = paths[-1]
+        for i in range(len(prev) - 1):
+            root = prev[: i + 1]
+            banned_links = {
+                (p[i], p[i + 1]) for p in paths if len(p) > i + 1 and p[: i + 1] == root
+            }
+            banned_nodes = set(root[:-1])
+            spur = _bfs_path(topo, prev[i], dst, banned_nodes, banned_links)
+            if spur is None:
+                continue
+            total = root[:-1] + spur
+            key = tuple(total)
+            if key in seen:
+                continue
+            seen.add(key)
+            if max_stretch is not None and len(total) - 1 > shortest_hops + max_stretch:
+                continue
+            heapq.heappush(
+                candidates, (len(total) - 1, tuple(str(s) for s in total), total)
+            )
+        if not candidates:
+            break
+        paths.append(heapq.heappop(candidates)[2])
+    return [tuple(p) for p in paths]
 
 
 def _load_aware_shortest_path(

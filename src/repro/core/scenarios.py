@@ -60,6 +60,7 @@ def aggregate(
     pod_axis: str | None = None,
     rep_groups=None,
     rep_axis: str | None = None,
+    ring_order: "Any | None" = None,
 ) -> Any:
     """Aggregate (mean) a gradient pytree across the DP axes, in-network
     or at the endpoint per ``scenario``. Must be called inside shard_map.
@@ -67,10 +68,31 @@ def aggregate(
     ``rep_groups``/``rep_axis``: optional replica subgroups of the model
     axis (see models/parallel.py) whose gradients also need summing; they
     always use a cheap psum (tiny group, latency-bound).
+
+    ``ring_order``: optional device order (a permutation of the
+    ``data_axis`` indices) the S2/S3 in-transit rings follow instead of
+    the hardcoded rank order ``i → i+1`` — pass
+    ``plan_ring_order(world, topo=...)`` to drive the ring from a
+    compiled plan on the production torus. Any permutation preserves the
+    aggregated values (the ring visits every rank exactly once); the
+    order only changes which physical links each hop crosses.
     """
     scenario = Scenario(scenario)
     axes = [data_axis] + ([pod_axis] if pod_axis else [])
     scale = _mean_scale(axes)
+    ring_groups = None
+    if ring_order is not None:
+        order = [int(i) for i in ring_order]
+        if sorted(order) != list(range(lax.axis_size(data_axis))):
+            raise ValueError(
+                f"ring_order must be a permutation of range({lax.axis_size(data_axis)}), "
+                f"got {order}"
+            )
+        ring_groups = [order]
+
+    def _ring(g, a, **kw):
+        groups = ring_groups if a == data_axis else None
+        return coll.ring_all_reduce(g, a, groups=groups, **kw)
 
     if rep_axis is not None and rep_groups is not None:
         grads = _tree_map(
@@ -91,16 +113,14 @@ def aggregate(
     if scenario is Scenario.S2_IN_NET:
         def in_net(g):
             for a in axes:
-                g = coll.ring_all_reduce(g, a)
+                g = _ring(g, a)
             return g * scale
         return _tree_map(in_net, grads)
 
     if scenario is Scenario.S3_IN_NET_MAP:
         def in_net_mapped(g):
             for a in axes:
-                g = coll.ring_all_reduce(
-                    g, a, wire_map=coll.bf16_wire, unmap=coll.fp32_unwire
-                )
+                g = _ring(g, a, wire_map=coll.bf16_wire, unmap=coll.fp32_unwire)
             return g * scale
         return _tree_map(in_net_mapped, grads)
 
@@ -128,6 +148,7 @@ def scenario_program(
     *,
     state_width: int = 1,
     shuffle_buckets: int | None = None,
+    hosts: "list[str] | None" = None,
 ):
     """Gradient aggregation over ``world`` workers as a p4mr Program.
 
@@ -149,10 +170,14 @@ def scenario_program(
     scenario = Scenario(scenario)
     if scenario not in (Scenario.S1_HOST, Scenario.S2_IN_NET, Scenario.S3_IN_NET_MAP):
         raise ValueError(f"no DAG form for {scenario} (native/hierarchical are XLA-level)")
+    if hosts is None:
+        hosts = [f"d{i}" for i in range(world)]
+    elif len(hosts) != world:
+        raise ValueError(f"{world} workers but {len(hosts)} hosts")
     p = dag.Program()
     leaves = []
     for i in range(world):
-        p.store(f"g{i}", host=f"d{i}", items=state_width)
+        p.store(f"g{i}", host=hosts[i], items=state_width)
         if scenario is Scenario.S3_IN_NET_MAP:
             p.map(f"w{i}", f"g{i}", fn_name="to_bf16")
             leaves.append(f"w{i}")
@@ -177,7 +202,7 @@ def scenario_program(
     if scenario is Scenario.S3_IN_NET_MAP:
         p.map("U", "R", fn_name="from_bf16")
         out = "U"
-    p.collect("OUT", out, sink_host="d0")
+    p.collect("OUT", out, sink_host=hosts[0])
     return p
 
 
@@ -227,6 +252,76 @@ def compile_scenario(
         topo, candidates, cost_model=cost_model,
     )
     return min((chain, shuffled), key=lambda pl: pl.cost.scalar)
+
+
+def plan_ring_order(
+    world: int,
+    *,
+    topo=None,
+    state_width: int = 8,
+) -> list[int]:
+    """Ring device order for ``aggregate``'s S2/S3 in-transit rings,
+    derived from a compiled plan instead of the hardcoded rank order.
+
+    Compiles the S2 aggregation DAG on ``topo`` (default: the
+    ``world``-device torus; named ``SwitchTopology`` fabrics are embedded
+    via ``as_indexed`` so switch ids are mesh indices) and chains the
+    workers' placed stores by the plan's own distance metric: starting
+    from the plan's collection sink, each hop goes to the nearest
+    not-yet-visited worker switch (``weighted_distance``, the same metric
+    the placer scored — so a DCN-penalized pod dim is walked last). On a
+    multi-dim torus this yields the snake order whose ring hops are
+    physical neighbor links, where the hardcoded rank order pays
+    wrap-around detours. The result is a permutation of ``range(world)``:
+    any order is value-preserving, this one follows the plan's cheap
+    edges.
+    """
+    from repro import compiler
+    from repro.core import primitives as prim
+    from repro.core.topology import TorusTopology
+
+    topo = topo if topo is not None else TorusTopology(dims=(world,))
+    if hasattr(topo, "as_indexed"):
+        topo = topo.as_indexed()
+    hosts = list(topo.hosts)
+    if world > len(hosts):
+        raise ValueError(f"{world} workers but topology has {len(hosts)} hosts")
+    # one static-pipeline compile: the walk below only needs the plan's
+    # placement and metric, so the chain-vs-shuffle arbitration of
+    # compile_best and the reroute-feedback simulate rounds (which only
+    # move routes, fixed after placement) would both be wasted here
+    plan = compiler.compile(
+        scenario_program(
+            world, Scenario.S2_IN_NET, state_width=state_width, hosts=hosts[:world]
+        ),
+        topo,
+        passes=compiler.STATIC_ECMP_PASSES,
+    )
+    devices = sorted(
+        int(plan.placement.switch_of(n.name))
+        for n in plan.program
+        if isinstance(n, prim.Store)
+    )
+    if devices != list(range(world)):
+        raise ValueError(
+            f"workers on {type(topo).__name__} do not map to devices "
+            f"0..{world - 1}: {devices} (one uplink switch per worker required)"
+        )
+    sink = next(
+        int(plan.placement.switch_of(n.name))
+        for n in plan.program
+        if isinstance(n, prim.Collect)
+    )
+    dist = getattr(topo, "weighted_distance", topo.hop_distance)
+    order: list[int] = []
+    remaining = devices
+    cur = sink
+    while remaining:
+        nxt = min(remaining, key=lambda d: (dist(cur, d), d))
+        order.append(nxt)
+        remaining = [d for d in remaining if d != nxt]
+        cur = nxt
+    return order
 
 
 def simulated_scenario_time(

@@ -21,14 +21,17 @@ from repro.shuffle.spmd import partition_tokens, shuffle_reduce, token_shuffle
 from repro.shuffle.stats import (
     ShuffleStats,
     arbitrate_buckets,
+    measured_bucket_packets,
     plan_shuffle,
     with_num_buckets,
+    with_weights,
 )
 
 __all__ = [
     "ShuffleStats",
     "arbitrate_buckets",
     "lower_shuffle_pass",
+    "measured_bucket_packets",
     "partition_tokens",
     "plan_shuffle",
     "resample_weights",
@@ -36,4 +39,5 @@ __all__ = [
     "split_widths",
     "token_shuffle",
     "with_num_buckets",
+    "with_weights",
 ]

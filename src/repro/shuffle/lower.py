@@ -278,6 +278,11 @@ def lower_shuffle_pass(ctx: CompileCtx) -> str:
     taken: set[str] = set()
     nodes: list[prim.Node] = []
     n_buckets_out = 0
+    # lowering record for downstream consumers (plan.shuffle_meta): the
+    # autotune move-reducer action needs the per-bucket reducer labels and
+    # reweight needs declared widths, without re-deriving them from the
+    # rewritten DAG
+    meta = ctx.options.setdefault("shuffle_lowering", {})
     for n in p:
         if n.name in lowered_keybys:
             continue  # replaced by its ShuffleBucket nodes (emitted below)
@@ -285,6 +290,14 @@ def lower_shuffle_pass(ctx: CompileCtx) -> str:
             nodes.append(n)
             continue
         sh = shuffles[n.name]
+        meta[n.name] = {
+            "num_buckets": len(sh.widths),
+            "widths": list(sh.widths),
+            "offsets": list(sh.offsets),
+            "keybys": [k.name for k in sh.keybys],
+            "bucket_switch": dict(sh.bucket_switch),
+            "bucket_reducers": {},
+        }
         part_labels: list[str] = []
         for b, sw in sorted(sh.bucket_switch.items()):
             member_labels = []
@@ -312,6 +325,7 @@ def lower_shuffle_pass(ctx: CompileCtx) -> str:
                 )
             )
             ctx.pins[plabel] = sw
+            meta[n.name]["bucket_reducers"][b] = plabel
             part_labels.append(plabel)
         nodes.append(prim.Concat(name=n.name, srcs=tuple(part_labels)))
         if sh.sink_switch is not None and n.name not in ctx.pins:

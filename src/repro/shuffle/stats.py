@@ -113,6 +113,40 @@ def plan_shuffle(plan) -> ShuffleStats | None:
     )
 
 
+def measured_bucket_packets(plan) -> dict[int, int]:
+    """Per-bucket packet counts of a lowered plan's shuffle — the same
+    dtype-packed trains the streaming simulator services, summed over all
+    mappers feeding each bucket. This is the measured signal the autotune
+    ``reweight`` action learns ``KeyBy.weights`` from (instead of trusting
+    the declaration). Empty when the plan has no lowered shuffle."""
+    traffic = plan.cost_model.traffic(plan.program)
+    packets: dict[int, int] = {}
+    for n in plan.program:
+        if isinstance(n, prim.ShuffleBucket):
+            packets[n.bucket] = packets.get(n.bucket, 0) + traffic[n.name].packets
+    return dict(sorted(packets.items()))
+
+
+def with_weights(program: dag.Program, weights: Sequence[float] | None) -> dag.Program:
+    """Copy of ``program`` with every KeyBy's skew ``weights`` replaced
+    (``None`` resets to uniform), for the autotune reweight action."""
+    nodes = []
+    for n in program:
+        if isinstance(n, prim.KeyBy):
+            if weights is not None and len(weights) != n.num_buckets:
+                raise ValueError(
+                    f"{len(weights)} weights for keyby {n.name!r} with {n.num_buckets} buckets"
+                )
+            n = prim.KeyBy(
+                name=n.name,
+                src=n.src,
+                num_buckets=n.num_buckets,
+                weights=tuple(weights) if weights is not None else None,
+            )
+        nodes.append(n)
+    return dag.Program.from_nodes(nodes)
+
+
 def with_num_buckets(program: dag.Program, num_buckets: int) -> dag.Program:
     """Copy of ``program`` with every KeyBy rewritten to ``num_buckets``
     (declared skew re-binned via ``resample_weights``), for bucket-count

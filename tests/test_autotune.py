@@ -1,0 +1,256 @@
+"""repro.autotune: profile-guided plan search + the k-shortest-paths
+candidate generator it reroutes with."""
+import numpy as np
+import pytest
+
+from repro import autotune, compiler
+from repro.core import dag, topology, wordcount
+from repro.core.routing import k_shortest_paths
+
+
+def _skewed_shuffle(num_buckets=8, skew=2.0, vocab=256, mappers=8):
+    ft = topology.fat_tree_topology(4)
+    weights = (
+        None if skew == 0.0
+        else tuple(1.0 / (b + 1) ** skew for b in range(num_buckets))
+    )
+    prog = wordcount.wordcount_shuffle_program(
+        mappers, vocab, num_buckets=num_buckets, weights=weights,
+        hosts=[f"h{i}" for i in range(mappers)], sink_host=f"h{len(ft.hosts) - 1}",
+    )
+    return prog, ft
+
+
+# ------------------------------------------------------- k-shortest-paths --
+def test_k_shortest_paths_simple_sorted_bounded():
+    ft = topology.fat_tree_topology(4)
+    paths = k_shortest_paths(ft, "E0_0", "E2_0", 6)
+    assert 1 <= len(paths) <= 6
+    hops = [len(p) - 1 for p in paths]
+    assert hops == sorted(hops)  # shortest first
+    assert hops[0] == ft.hop_distance("E0_0", "E2_0")
+    for p in paths:
+        assert p[0] == "E0_0" and p[-1] == "E2_0"
+        assert len(set(p)) == len(p)  # simple: no repeated switch
+        for a, b in zip(p, p[1:]):
+            assert b in ft.neighbors(a)  # every hop is a real link
+    assert len(set(paths)) == len(paths)
+    # the generator's point: it proposes strictly longer detours too
+    assert hops[-1] > hops[0]
+
+
+def test_k_shortest_paths_respects_max_paths_and_degenerate_cases():
+    ft = topology.fat_tree_topology(4)
+    assert len(k_shortest_paths(ft, "E0_0", "E2_0", 2)) == 2
+    assert k_shortest_paths(ft, "E0_0", "E0_0", 3) == [("E0_0",)]
+    with pytest.raises(ValueError):
+        k_shortest_paths(ft, "E0_0", "E2_0", 0)
+    # torus: max_stretch keeps only minimal(+slack) detours
+    t = topology.TorusTopology(dims=(4, 4))
+    minimal = t.hop_distance(0, 5)
+    for p in k_shortest_paths(t, 0, 5, 8, max_stretch=0):
+        assert len(p) - 1 == minimal
+
+
+class _NoNeighbors:
+    """Topology exposing only shortest_path (no neighbors attr)."""
+
+    def __init__(self, base):
+        self._base = base
+        self.switches = base.switches
+        self.hosts = base.hosts
+
+    def attach_switch(self, host):
+        return self._base.attach_switch(host)
+
+    def hop_distance(self, a, b):
+        return self._base.hop_distance(a, b)
+
+    def shortest_path(self, a, b):
+        return self._base.shortest_path(a, b)
+
+
+def test_no_neighbors_fallback_in_ksp_and_build_routes():
+    """Topologies without ``neighbors`` degrade to the fixed shortest
+    path — in the candidate generator and in ``build_routes`` alike."""
+    limited = _NoNeighbors(topology.paper_topology())
+    assert k_shortest_paths(limited, "S1", "S6", 4) == [
+        tuple(limited.shortest_path("S1", "S6"))
+    ]
+    p = dag.Program()
+    p.store("A", host="h1", items=4)
+    p.store("B", host="h2", items=4)
+    p.sum("D", "A", "B", state_width=4)
+    p.collect("OUT", "D", sink_host="h6")
+    plan = compiler.compile(p, limited)  # full pipeline incl. reroute-feedback
+    fixed = {
+        (r.src_label, r.dst_label): tuple(limited.shortest_path(r.path[0], r.path[-1]))
+        for r in plan.routes.routes
+    }
+    assert {(r.src_label, r.dst_label): r.path for r in plan.routes.routes} == fixed
+
+
+# ----------------------------------------------------------- search driver --
+def test_hill_climb_accepts_best_and_never_worsens():
+    def objective(x):
+        return float(x)
+
+    def propose(x, rnd):
+        return [
+            autotune.Candidate("add", "+1", lambda x=x: x + 1),
+            autotune.Candidate("sub", "-2", lambda x=x: x - 2),
+            autotune.Candidate("skip", "nope", lambda: (_ for _ in ()).throw(
+                autotune.SkipCandidate("infeasible"))),
+        ]
+
+    best, score, records = autotune.hill_climb(
+        10.0, objective=objective, propose=propose, rounds=3)
+    assert best == 4.0 and score == 4.0  # -2 accepted thrice (steepest)
+    accepted = [r for r in records if r.accepted]
+    assert [r.kind for r in accepted] == ["sub"] * 3
+    skipped = [r for r in records if r.score is None]
+    assert all(r.note == "infeasible" for r in skipped) and len(skipped) == 3
+
+    # no improving candidate: the input state comes back unchanged
+    best, score, records = autotune.hill_climb(
+        0.0, objective=objective,
+        propose=lambda x, r: [autotune.Candidate("add", "+1", lambda x=x: x + 1)],
+        rounds=5)
+    assert best == 0.0 and not [r for r in records if r.accepted]
+    assert len(records) == 1  # stop_when_stuck: one stuck round ends it
+
+    _, _, records = autotune.hill_climb(
+        0.0, objective=objective,
+        propose=lambda x, r: [autotune.Candidate("add", "+1", lambda x=x: x + 1)],
+        rounds=5, stop_when_stuck=False)
+    assert len(records) == 5  # ladder mode: every round still measured
+
+
+# ------------------------------------------------------------------- tune --
+def test_tune_never_worse_than_feedback_across_sweep():
+    for num_buckets, skew in ((2, 0.0), (4, 1.0), (8, 2.0)):
+        prog, ft = _skewed_shuffle(num_buckets=num_buckets, skew=skew)
+        fb = compiler.compile(prog, ft)
+        tuned = autotune.tune(fb, rounds=3)
+        assert tuned.simulate_timing().time_s <= fb.simulate_timing().time_s * (1 + 1e-9)
+        assert tuned.tuning.improvement_pct >= -1e-9
+
+
+def test_tune_improves_skewed_shuffle_with_attribution():
+    """Acceptance: the tuner beats the feedback-only plan by >=10% on the
+    skewed fat-tree shuffle, and the report attributes the win."""
+    prog, ft = _skewed_shuffle(num_buckets=8, skew=2.0)
+    fb = compiler.compile(prog, ft)
+    tuned = autotune.tune(fb, rounds=6)
+    rep = tuned.tuning
+    assert rep.improvement_pct >= 10.0
+    assert rep.final_makespan_ticks < rep.initial_makespan_ticks
+    assert rep.accepted and rep.accepted_by_kind()  # attribution present
+    for a in rep.accepted:
+        assert a.time_s_after < a.time_s_before
+    # every evaluation is on the record, not only the winners
+    assert len(rep.actions) > len(rep.accepted)
+    d = rep.to_dict()
+    assert d["accepted_by_kind"] == rep.accepted_by_kind()
+    assert len(d["actions"]) == len(rep.actions)
+
+
+def test_tuned_plan_values_match_reference():
+    prog, ft = _skewed_shuffle(num_buckets=8, skew=2.0)
+    tuned = autotune.tune(compiler.compile(prog, ft), rounds=4)
+    rs = np.random.RandomState(7)
+    inputs = {f"s{i}": rs.randint(0, 50, size=(256,)).astype(np.float64)
+              for i in range(8)}
+    sim = tuned.simulate(inputs)
+    np.testing.assert_array_equal(
+        sim.outputs["OUT"], np.sum([inputs[f"s{i}"] for i in range(8)], axis=0))
+
+
+def test_reroute_only_fixes_static_collision_with_detours():
+    """The reroute action alone un-collides the two-hot-bucket static plan
+    (k-shortest-paths candidates, no feedback pass involved)."""
+    ft = topology.fat_tree_topology(4)
+    p = dag.Program()
+    for i, h in enumerate(["h0", "h2"]):
+        p.store(f"m{i}", host=h, items=21)
+        p.bucket(f"m{i}b0", f"m{i}", bucket=0, num_buckets=2, offset=0, width=20)
+        p.bucket(f"m{i}b1", f"m{i}", bucket=1, num_buckets=2, offset=20, width=1)
+    p.sum("R0", "m0b0", "m1b0", state_width=20)
+    p.sum("R1", "m0b1", "m1b1", state_width=1)
+    p.collect("OUT0", "R0", sink_host="h8")
+    p.collect("OUT1", "R1", sink_host="h10")
+    pins = {"R0": "E2_0", "R1": "E2_1"}
+    static = compiler.compile(p, ft, passes=compiler.STATIC_ECMP_PASSES, pins=pins)
+    tuned = autotune.tune(static, rounds=4, actions=("reroute",))
+    assert tuned.simulate_timing().makespan_ticks < static.simulate_timing().makespan_ticks
+    assert set(tuned.tuning.accepted_by_kind()) == {"reroute"}
+    # routed paths stay executable: consecutive path switches share a link
+    for r in tuned.routes.routes:
+        for a, b in zip(r.path, r.path[1:]):
+            assert b in ft.neighbors(a)
+
+
+def test_infeasible_rebucket_skips_instead_of_aborting():
+    """A candidate bucket count whose plan does not fit the memory budget
+    must be recorded as skipped, not crash the search (never-worse
+    guarantee survives infeasible candidates)."""
+    ft = topology.fat_tree_topology(4)
+    # budget fits the 8-bucket reducers (32 keys x 8B = 256B) but not the
+    # 4-bucket ones (512B), nor the unlowered 2048B reduce the lowering
+    # falls back to — so the half-bucket candidate's recompile must fail
+    cm = compiler.CostModel(switch_memory_bytes=384)
+    prog = wordcount.wordcount_shuffle_program(
+        8, 256, num_buckets=8,
+        hosts=[f"h{i}" for i in range(8)], sink_host=f"h{len(ft.hosts) - 1}",
+    )
+    fb = compiler.compile(prog, ft, cost_model=cm)
+    tuned = autotune.tune(fb, rounds=2, actions=("rebucket",))
+    assert tuned.simulate_timing().time_s <= fb.simulate_timing().time_s * (1 + 1e-9)
+    skipped = [a for a in tuned.tuning.actions if a.time_s_after is None]
+    assert skipped and all(a.note for a in skipped)
+
+
+def test_tune_restricted_action_families_and_unknown_action():
+    prog, ft = _skewed_shuffle(num_buckets=8, skew=2.0)
+    fb = compiler.compile(prog, ft)
+    tuned = autotune.tune(fb, rounds=2, actions=("reweight",))
+    assert set(tuned.tuning.accepted_by_kind()) <= {"reweight"}
+    with pytest.raises(ValueError, match="unknown autotune action"):
+        autotune.tune(fb, rounds=1, actions=("warp-drive",))
+
+
+def test_plan_carries_tuning_provenance():
+    """source_program / user_pins / shuffle_meta thread the pipeline so the
+    tuner can recompile; tuning survives on the plan, input is untouched."""
+    prog, ft = _skewed_shuffle(num_buckets=4, skew=1.0)
+    fb = compiler.compile(prog, ft)
+    assert fb.source_program is not None
+    assert sorted(n.name for n in fb.source_program) == sorted(n.name for n in prog)
+    assert fb.user_pins == {}
+    assert fb.shuffle_meta and "COUNTS" in fb.shuffle_meta
+    meta = fb.shuffle_meta["COUNTS"]
+    assert sum(meta["widths"]) == 256
+    assert set(meta["bucket_reducers"]) == set(meta["bucket_switch"])
+    for b, label in meta["bucket_reducers"].items():
+        assert fb.placement.switch_of(label) == meta["bucket_switch"][b]
+    tuned = autotune.tune(fb, rounds=2)
+    assert tuned.tuning is not None and fb.tuning is None
+
+
+# ------------------------------------------------------- pass integration --
+def test_autotune_pass_and_compile_best_entry():
+    prog, ft = _skewed_shuffle(num_buckets=8, skew=2.0)
+    fb = compiler.compile(prog, ft)
+    plan = compiler.compile(prog, ft, passes=compiler.AUTOTUNE_PASSES,
+                            options={"autotune_rounds": 3})
+    assert plan.tuning is not None
+    assert any(r.name == "autotune" for r in plan.trace)
+    assert plan.simulate_timing().time_s <= fb.simulate_timing().time_s * (1 + 1e-9)
+
+    off = compiler.compile(prog, ft, passes=compiler.AUTOTUNE_PASSES,
+                           options={"autotune_rounds": 0})
+    assert off.tuning is None
+
+    best = compiler.compile_best(prog, ft, autotune=True)
+    assert best.simulate_timing().time_s <= fb.simulate_timing().time_s * (1 + 1e-9)
+    assert best.tuning is not None  # the autotuned candidate wins here

@@ -337,6 +337,49 @@ def test_codelet_compile_program_is_deprecated_shim():
     assert callable(step)
 
 
+def test_codelet_shim_output_matches_compiler(multidevice):
+    """The deprecated ``codelet.compile_program`` emits bitwise the same
+    step as ``compiler.compile(...).jax_step()`` for one plan."""
+    out = multidevice("""
+    import warnings
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro import compiler
+    from repro.core import codelet, dag, topology
+
+    p = dag.Program()
+    p.store("A", host="h1", items=4)
+    p.store("B", host="h2", items=4)
+    p.sum("D", "A", "B", state_width=4)
+    p.collect("OUT", "D", sink_host="h6")
+    topo = topology.paper_topology().as_indexed(num_devices=8)
+    plan = compiler.compile(p, topo)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # anything but the DeprecationWarning fails
+        try:
+            codelet.compile_program(plan.program, plan.placement, plan.routes)
+            raise SystemExit("expected DeprecationWarning")
+        except DeprecationWarning:
+            pass
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        shim_step = codelet.compile_program(plan.program, plan.placement, plan.routes)
+
+    mesh = jax.make_mesh((8,), ("all",), axis_types=(jax.sharding.AxisType.Auto,))
+    rs = np.random.RandomState(5)
+    inputs = {k: jnp.asarray(np.tile(rs.randn(4).astype(np.float32)[None], (8, 1)))
+              for k in ("A", "B")}
+    run = lambda fn: jax.shard_map(fn, mesh=mesh, in_specs=P("all"),
+                                   out_specs=P("all"))(inputs)
+    got_shim, got_plan = run(shim_step), run(plan.jax_step())
+    assert set(got_shim) == set(got_plan)
+    for k in got_plan:
+        np.testing.assert_array_equal(np.asarray(got_shim[k]), np.asarray(got_plan[k]))
+    print("OK")
+    """)
+    assert "OK" in out
+
+
 # ------------------------------------------------------------------- misc --
 def test_program_to_source_round_trips():
     p = dsl.compile_source(dsl.PAPER_SOURCE)
