@@ -1,7 +1,10 @@
 """Compiler benchmark: time compile + simulate across program sizes and
 record optimized-vs-flat §3 cost plus static-ECMP vs feedback-routed
 streamed makespans, writing a BENCH_compile.json artifact (gated by CI's
-bench-smoke regression check on the simulated metrics).
+bench-smoke regression check on the simulated metrics). Compiles run
+through the framework API (``repro.p4mr.Session``); the multi-job cell
+prices two tenants sharing one fat-tree (``Session.simulate`` streams
+both jobs' packet trains through the shared switch queues).
 
     PYTHONPATH=src:. python benchmarks/run.py compile
 """
@@ -13,7 +16,7 @@ import time
 
 import numpy as np
 
-from repro import compiler
+from repro import p4mr
 from repro.core import dsl, topology, wordcount
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -30,14 +33,19 @@ def _time_us(fn, repeats: int = 5) -> float:
 
 
 def _case(name: str, program_or_src, topo, inputs) -> dict:
-    plan = compiler.compile_best(program_or_src, topo)  # cost model picks pipeline
-    flat = compiler.compile(program_or_src, topo, passes=compiler.UNOPTIMIZED_PASSES)
-    static = compiler.compile(program_or_src, topo, passes=compiler.STATIC_ECMP_PASSES)
-    compile_us = _time_us(lambda: compiler.compile(program_or_src, topo))
+    sess = p4mr.Session(topo)
+    plan = sess.compile_best(program_or_src, name="best")  # cost model picks pipeline
+    flat = sess.compile(program_or_src, name="flat", options="unoptimized")
+    static = sess.compile(program_or_src, name="static", options="static_ecmp")
+    # time the framework compile path in a throwaway session so the
+    # measurement never pollutes this cell's registry
+    compile_us = _time_us(
+        lambda: p4mr.Session(topo).compile(program_or_src, name="timed")
+    )
     simulate_us = _time_us(lambda: plan.simulate(inputs))
     sim = plan.simulate(inputs)
     sim_flat = flat.simulate(inputs)
-    feedback = compiler.compile(program_or_src, topo)  # full pipeline
+    feedback = sess.compile(program_or_src, name="feedback")  # full default pipeline
     sim_static = static.simulate_timing()
     sim_feedback = feedback.simulate_timing()
     return {
@@ -62,6 +70,44 @@ def _case(name: str, program_or_src, topo, inputs) -> dict:
     }
 
 
+def _two_tenant_job(name: str, hosts: list[str], sink: str, vocab: int) -> p4mr.Job:
+    job = p4mr.job(name)
+    keyed = [
+        job.store(f"s{i}", host=h, items=vocab).key_by(4)
+        for i, h in enumerate(hosts)
+    ]
+    keyed[0].reduce("SUM", *keyed[1:], label="R").collect(sink, label="OUT")
+    return job
+
+
+def _multi_job_case() -> dict:
+    """Two word-count tenants on one fat-tree: the combined streamed
+    makespan vs each job alone — shared-fabric contention, the first
+    scenario family only a Session can express."""
+    ft = topology.fat_tree_topology(4)
+    vocab = 64
+    sess = p4mr.Session(ft)
+    sess.compile(_two_tenant_job("tenant_a", [f"h{i}" for i in range(4)], "h15", vocab),
+                 name="tenant_a")
+    sess.compile(_two_tenant_job("tenant_b", [f"h{i}" for i in range(4, 8)], "h12", vocab),
+                 name="tenant_b")
+    simulate_us = _time_us(lambda: sess.simulate())
+    rep = sess.simulate()
+    solo = rep.solo_makespan_ticks
+    return {
+        "name": "multi_job.fat_tree_k4.two_wordcounts",
+        "simulate_us": round(simulate_us, 2),
+        # combined is gated; it must stay >= every solo makespan (queues
+        # only add delay) — tests/test_p4mr.py pins the invariant
+        "makespan_ticks": rep.combined.makespan_ticks,
+        "makespan_ticks_solo_a": solo["tenant_a"],
+        "makespan_ticks_solo_b": solo["tenant_b"],
+        "contention_ticks": rep.contention_ticks,
+        "queue_delay_ticks": rep.combined.queue_delay_ticks,
+        "wire_bytes": round(rep.combined.wire_bytes, 1),
+    }
+
+
 def run() -> list[tuple[str, float, str]]:
     records = []
 
@@ -80,11 +126,20 @@ def run() -> list[tuple[str, float, str]]:
         inputs = {f"s{i}": np.ones((vocab,)) for i in range(n)}
         records.append(_case(f"wordcount_n{n}", prog, topo, inputs))
 
+    records.append(_multi_job_case())
+
     with open(OUT_PATH, "w") as f:
         json.dump(records, f, indent=2)
 
     rows = []
     for r in records:
+        if r["name"].startswith("multi_job"):
+            rows.append((
+                f"compile.{r['name']}", r["simulate_us"],
+                f"combined={r['makespan_ticks']}t solo_a={r['makespan_ticks_solo_a']}t "
+                f"solo_b={r['makespan_ticks_solo_b']}t contention=+{r['contention_ticks']}t",
+            ))
+            continue
         rows.append((
             f"compile.{r['name']}", r["compile_us"],
             f"simulate={r['simulate_us']:.0f}us "

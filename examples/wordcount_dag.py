@@ -1,7 +1,8 @@
-"""The paper's §5.2 example through the pass-based compiler: DSL →
-passes (DCE, reduce-tree rebalance, combiners) → CompiledPlan → both
-backends (packet simulator + JAX ppermute codelet on the Fig-10
-topology), plus the word-count DAG end to end.
+"""The paper's §5.2 example through the framework API: ``p4mr.from_source``
+→ ``Session.compile`` (passes: DCE, reduce-tree rebalance, combiners) →
+``plan.run`` on every backend (packet simulator + JAX ppermute codelet on
+the Fig-10 topology), plus the word-count DAG end to end and a two-job
+shared-fabric simulation.
 
     PYTHONPATH=src python examples/wordcount_dag.py
 """
@@ -11,7 +12,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
 
-from repro import compiler
+from repro import p4mr
 from repro.core import dsl, topology, wordcount
 
 
@@ -21,9 +22,9 @@ def paper_example():
     print(src)
 
     # the 6-switch Fig-10 graph, embedded in an 8-device axis for the mesh
-    topo = topology.paper_topology().as_indexed(num_devices=8)
-    plan = compiler.compile(src, topo)
-    unopt = compiler.compile(src, topo, passes=compiler.UNOPTIMIZED_PASSES)
+    sess = p4mr.Session(topology.paper_topology().as_indexed(num_devices=8))
+    plan = sess.compile(p4mr.from_source(src, name="paper_5_2"))
+    unopt = sess.compile(src, name="paper_flat", options="unoptimized")
     print(plan.describe(), "\n")
 
     ins = {"A": np.array([3.0]), "B": np.array([4.0]), "C": np.array([5.0])}
@@ -38,19 +39,11 @@ def paper_example():
     assert sim.outputs["OUT"][0] == 12.0
     assert sim.report.time_s <= sim_u.report.time_s
 
-    # backend 2: JAX ppermute codelet on an 8-device mesh
-    import jax
-    import jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
-
-    step = plan.jax_step()
-    mesh = jax.make_mesh((8,), ("all",), axis_types=(jax.sharding.AxisType.Auto,))
-    big = {k: jnp.asarray(np.tile(np.asarray(v, np.float32)[None], (8, 1)))
-           for k, v in ins.items()}
-    out = jax.shard_map(step, mesh=mesh, in_specs=P("all"), out_specs=P("all"))(big)
-    result = float(np.asarray(out["OUT@all"])[0, 0])
-    print(f"jax backend: E = SUM(C, SUM(A, B)) in transit = {result} (expected 12.0)")
-    assert result == 12.0
+    # backend 2: the same plan on an 8-device JAX mesh, one call
+    out = plan.run(ins, backend="jax")
+    print(f"jax backend: E = SUM(C, SUM(A, B)) in transit = {out['OUT'][0]} "
+          "(expected 12.0)")
+    assert out["OUT"][0] == 12.0
 
 
 def wordcount_example():
@@ -64,13 +57,18 @@ def wordcount_example():
           f"counts match oracle; makespan={sim.report.makespan_ticks} ticks, "
           f"recirc={sim.report.recirculations}")
 
-    # the compiled in-network shuffle (lower-shuffle pass): per-bucket
-    # routed edges, skew visible as per-bucket wire bytes + queueing
-    from repro import compiler, shuffle
+    # the compiled in-network shuffle (lower-shuffle pass) via the fluent
+    # builder: per-bucket routed edges, skew visible as wire bytes + queueing
+    from repro import shuffle
 
-    prog = wordcount.wordcount_shuffle_program(
-        shards, vocab, num_buckets=4, weights=(4, 2, 1, 1))
-    plan = compiler.compile(prog, topology.TorusTopology(dims=(shards,)))
+    job = p4mr.job("wordcount-skewed")
+    keyed = [
+        job.store(f"s{i}", host=f"d{i}", items=vocab).key_by(4, weights=(4, 2, 1, 1))
+        for i in range(shards)
+    ]
+    keyed[0].reduce("SUM", *keyed[1:], label="COUNTS").collect(f"d{shards - 1}", label="OUT")
+    sess = p4mr.Session(topology.TorusTopology(dims=(shards,)))
+    plan = sess.compile(job)
     stats = shuffle.plan_shuffle(plan)
     hists = {f"s{i}": wordcount.wordcount_reference([ws], vocab).astype(np.float64)
              for i, ws in enumerate(word_shards)}
@@ -83,6 +81,23 @@ def wordcount_example():
           f"{sim2.report.queue_delay_ticks} ticks")
 
 
+def multi_job_example():
+    # two tenants on one fat-tree: Session.simulate streams both jobs'
+    # packet trains through the shared switch queues at once
+    ft = topology.fat_tree_topology(4)
+    sess = p4mr.Session(ft)
+    for name, hosts, sink in (("tenant_a", range(4), "h15"), ("tenant_b", range(4, 8), "h12")):
+        job = p4mr.job(name)
+        keyed = [job.store(f"s{i}", host=f"h{h}", items=64).key_by(4)
+                 for i, h in enumerate(hosts)]
+        keyed[0].reduce("SUM", *keyed[1:], label="R").collect(sink, label="OUT")
+        sess.compile(job)
+    rep = sess.simulate()
+    print(f"\nshared fabric: {rep.summary()}")
+    assert rep.combined.makespan_ticks >= max(rep.solo_makespan_ticks.values())
+
+
 if __name__ == "__main__":
     paper_example()
     wordcount_example()
+    multi_job_example()

@@ -61,12 +61,22 @@ def tune(
     """
     initial = plan.simulate_timing()
     makespans: dict[int, int] = {}
+    # cached records never rebuild the plan, so their makespan comes from
+    # the first (non-cached) evaluation of the same key
+    key_makespans: dict[tuple, int] = {}
+    # candidate cache: (action, mutation-params) → streamed time, so a
+    # mutation re-proposed in a later round (e.g. the same rebucket after a
+    # reroute accept) is not recompiled and re-simulated (ROADMAP item)
+    cache: dict[tuple, float] = {}
 
     def objective(pl: CompiledPlan) -> float:
         return pl.simulate_timing().time_s
 
     def observe(rec: EvalRecord, pl: CompiledPlan) -> None:
-        makespans[id(rec)] = pl.simulate_timing().makespan_ticks
+        ticks = pl.simulate_timing().makespan_ticks
+        makespans[id(rec)] = ticks
+        if rec.cache_key is not None:
+            key_makespans[rec.cache_key] = ticks
 
     best, _, records = hill_climb(
         plan,
@@ -75,6 +85,7 @@ def tune(
         rounds=rounds,
         min_gain=min_gain,
         on_eval=observe,
+        cache=cache,
     )
     final = best.simulate_timing()
     report = TuningReport(
@@ -83,6 +94,14 @@ def tune(
         final_time_s=final.time_s,
         final_makespan_ticks=final.makespan_ticks,
         rounds_run=max((r.round for r in records), default=0),
+        cache_hits=sum(1 for r in records if r.cached),
+        # misses are *cacheable* evaluations only (key-less candidates
+        # were never cacheable and must not dilute the hit-rate)
+        cache_misses=sum(
+            1
+            for r in records
+            if r.score is not None and not r.cached and r.cache_key is not None
+        ),
         actions=[
             TunedAction(
                 round=r.round,
@@ -91,8 +110,9 @@ def tune(
                 accepted=r.accepted,
                 time_s_before=r.score_before,
                 time_s_after=r.score,
-                makespan_ticks_after=makespans.get(id(r)),
+                makespan_ticks_after=makespans.get(id(r), key_makespans.get(r.cache_key)),
                 note=r.note,
+                cached=r.cached,
             )
             for r in records
         ],

@@ -62,6 +62,24 @@ def _path_str(path: tuple[NodeId, ...]) -> str:
     return "→".join(str(s) for s in path)
 
 
+# Cache-key fingerprints: every Candidate carries a hashable key over
+# (action family, mutation params, everything its build reads). Within one
+# tune run the topology and cost model are fixed, so equal keys rebuild
+# byte-equal plans — the hill-climb's candidate cache skips re-simulating
+# them when a later round re-proposes the identical mutation.
+def _program_fp(program) -> tuple:
+    """IR nodes are frozen dataclasses, hence hashable as-is."""
+    return tuple(program.nodes.values())
+
+
+def _pins_fp(pins: dict) -> tuple:
+    return tuple(sorted(pins.items(), key=lambda kv: str(kv[0])))
+
+
+def _routes_fp(routes: RoutingTable) -> tuple:
+    return tuple((r.src_label, r.dst_label, r.path) for r in routes.routes)
+
+
 def _with_routes(plan: CompiledPlan, routes: RoutingTable) -> CompiledPlan:
     """Same plan, different routing table (cost re-scored, timing memo
     dropped with the new instance)."""
@@ -96,6 +114,7 @@ def reroute_candidates(
     scored.sort(key=lambda t: (-t[0], t[1]))
 
     out: list[Candidate] = []
+    prog_fp, routes_fp = _program_fp(plan.program), _routes_fp(plan.routes)
     for _, idx in scored[:max_flows]:
         r = plan.routes.routes[idx]
         try:
@@ -119,6 +138,7 @@ def reroute_candidates(
                         f"[{_path_str(r.path)}] ⇒ {len(alt) - 1} hops [{_path_str(alt)}]"
                     ),
                     build=build,
+                    cache_key=("reroute", prog_fp, routes_fp, idx, alt),
                 )
             )
     return out
@@ -198,6 +218,13 @@ def move_reducer_candidates(
                     kind="move-reducer",
                     detail=f"{label}: {cur} ⇒ {sw} (queued {queued.get(cur, 0)} pkt)",
                     build=build,
+                    # the rebuild recompiles plan.program under the mutated
+                    # pin set: program + pins determine it fully
+                    cache_key=(
+                        "move-reducer",
+                        _program_fp(plan.program),
+                        _pins_fp({**plan.pins, label: sw}),
+                    ),
                 )
             )
     return out
@@ -289,6 +316,7 @@ def rebucket_candidates(plan: CompiledPlan, *, n_sim: int = 2) -> list[Candidate
     ranked = sorted(counts, key=lambda b: (bottleneck(b), b))[:n_sim]
 
     out: list[Candidate] = []
+    src_fp, pins_fp = _program_fp(src), _pins_fp(plan.user_pins)
     for b in ranked:
 
         def build(b=b):
@@ -299,6 +327,9 @@ def rebucket_candidates(plan: CompiledPlan, *, n_sim: int = 2) -> list[Candidate
                 kind="rebucket",
                 detail=f"{cur_b} ⇒ {b} buckets (analytic bottleneck {bottleneck(b)} pkt)",
                 build=build,
+                # full recompile from the pre-lowering source program at
+                # bucket count b under the user pins — nothing else read
+                cache_key=("rebucket", src_fp, pins_fp, b),
             )
         )
     return out
@@ -359,6 +390,12 @@ def reweight_candidates(plan: CompiledPlan) -> list[Candidate]:
                 f"(hot bucket {hot}: {measured.get(hot, 0)} pkt)"
             ),
             build=build,
+            cache_key=(
+                "reweight",
+                _program_fp(src),
+                _pins_fp(plan.user_pins),
+                tuple(learned),
+            ),
         )
     ]
 

@@ -22,6 +22,7 @@ class TunedAction:
     time_s_after: float | None  # candidate streamed time; None when skipped
     makespan_ticks_after: int | None
     note: str = ""
+    cached: bool = False  # score served from the candidate cache (no rebuild)
 
     @property
     def gain_s(self) -> float:
@@ -39,6 +40,16 @@ class TuningReport:
     final_makespan_ticks: int
     rounds_run: int
     actions: list[TunedAction] = dataclasses.field(default_factory=list)
+    # candidate cache: (action, mutation-params) → simulated makespan.
+    # hits are re-proposed mutations whose recompile+simulate was skipped
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of cacheable evaluations served from the cache."""
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
     @property
     def improvement_pct(self) -> float:
@@ -68,6 +79,9 @@ class TuningReport:
             "improvement_pct": round(self.improvement_pct, 3),
             "rounds_run": self.rounds_run,
             "accepted_by_kind": self.accepted_by_kind(),
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_hit_rate": round(self.cache_hit_rate, 3),
             "actions": [
                 {
                     "round": a.round,
@@ -78,6 +92,7 @@ class TuningReport:
                     "time_s_after": a.time_s_after,
                     "makespan_ticks_after": a.makespan_ticks_after,
                     **({"note": a.note} if a.note else {}),
+                    **({"cached": True} if a.cached else {}),
                 }
                 for a in self.actions
             ],
@@ -89,8 +104,13 @@ class TuningReport:
         kinds = (
             ", ".join(f"{k}×{n}" for k, n in sorted(by_kind.items())) if by_kind else "none"
         )
+        cache = (
+            f", cache {self.cache_hits}/{self.cache_hits + self.cache_misses} hit"
+            if self.cache_hits
+            else ""
+        )
         return (
             f"{len(self.accepted)}/{len(self.actions)} action(s) accepted [{kinds}], "
             f"makespan {self.initial_makespan_ticks}→{self.final_makespan_ticks} ticks "
-            f"({self.improvement_pct:+.1f}%)"
+            f"({self.improvement_pct:+.1f}%){cache}"
         )

@@ -31,11 +31,18 @@ class SkipCandidate(Exception):
 @dataclasses.dataclass(frozen=True)
 class Candidate:
     """One proposed mutation: ``build()`` materializes the mutated state
-    (lazily — proposal must stay cheap, evaluation pays the cost)."""
+    (lazily — proposal must stay cheap, evaluation pays the cost).
+
+    ``cache_key`` optionally fingerprints ``(action, mutation params,
+    inputs the build reads)``: two candidates with equal keys must build
+    states with equal objectives. ``hill_climb`` then skips re-building
+    and re-scoring a key it already measured (identical recompiles were
+    previously re-simulated every round — the candidate cache)."""
 
     kind: str  # action family, e.g. "reroute" / "move-reducer"
     detail: str  # human-readable description of the mutation
     build: Callable[[], Any]
+    cache_key: "tuple | None" = None
 
 
 @dataclasses.dataclass
@@ -49,6 +56,8 @@ class EvalRecord:
     score: float | None  # candidate objective; None when build() skipped
     accepted: bool = False
     note: str = ""
+    cached: bool = False  # score served from the candidate cache
+    cache_key: "tuple | None" = None  # the candidate's key, cached or not
 
 
 def hill_climb(
@@ -60,6 +69,7 @@ def hill_climb(
     min_gain: float = 0.0,
     on_eval: Callable[[EvalRecord, Any], None] | None = None,
     stop_when_stuck: bool = True,
+    cache: dict | None = None,
 ) -> tuple[Any, float, list[EvalRecord]]:
     """Steepest-descent hill-climb; returns (best state, score, records).
 
@@ -70,6 +80,18 @@ def hill_climb(
     fixed ladders whose every rung must be measured (the roofline
     hillclimb bench) — improves nothing. ``on_eval`` observes each
     successfully built candidate with its record (benchmarks log here).
+
+    ``cache`` (optional, caller-owned) memoizes candidate objectives by
+    ``Candidate.cache_key``: a re-proposed key is recorded as a cache hit
+    and neither rebuilt nor re-scored. Skipping hits is sound because the
+    incumbent objective only ever decreases — a cached score was measured
+    against a worse-or-equal incumbent and not kept as the round winner,
+    so it can never beat the current acceptance bar. That argument binds
+    the cache's lifetime to ONE climb: a hit is never considered for
+    acceptance, so reusing the dict across ``hill_climb`` calls (where a
+    fresh, worse incumbent could legitimately accept a remembered key)
+    would silently discard known improvements. Pass a fresh dict per
+    call, as ``autotune.tune`` does.
     """
     if rounds < 0:
         raise ValueError(f"rounds must be >= 0, got {rounds}")
@@ -89,14 +111,22 @@ def hill_climb(
                 detail=cand.detail,
                 score_before=best_score,
                 score=None,
+                cache_key=cand.cache_key,
             )
             records.append(rec)
+            if cache is not None and cand.cache_key is not None and cand.cache_key in cache:
+                rec.score = cache[cand.cache_key]
+                rec.cached = True
+                rec.note = "cache hit"
+                continue
             try:
                 nxt = cand.build()
             except SkipCandidate as e:
                 rec.note = str(e) or "infeasible"
                 continue
             rec.score = float(objective(nxt))
+            if cache is not None and cand.cache_key is not None:
+                cache[cand.cache_key] = rec.score
             if on_eval is not None:
                 on_eval(rec, nxt)
             if rec.score < bar and (round_best is None or rec.score < round_best[0]):

@@ -214,6 +214,7 @@ def compile_best(
     pins: dict[str, NodeId] | None = None,
     autotune: bool = False,
     objective: str | None = None,
+    options: dict[str, Any] | None = None,
 ) -> CompiledPlan:
     """Compile under each candidate pipeline, keep the cheapest plan.
 
@@ -237,7 +238,10 @@ def compile_best(
     if objective not in ("static", "streamed"):
         raise ValueError(f"unknown objective {objective!r} (static or streamed)")
     plans = [
-        compile(src_or_program, topology, passes=p, cost_model=cost_model, pins=pins)
+        compile(
+            src_or_program, topology,
+            passes=p, cost_model=cost_model, pins=pins, options=options,
+        )
         for p in pipelines
     ]
     if objective == "streamed":

@@ -92,6 +92,82 @@ class CompiledPlan:
 
         return execute_reference(self.program, inputs)
 
+    def run(
+        self,
+        inputs: Mapping[str, np.ndarray],
+        *,
+        backend: str = "simulate",
+        axis_name: str = "all",
+        item_dtype=None,
+    ) -> dict[str, np.ndarray]:
+        """One execution surface over every backend.
+
+        ``inputs`` maps each Store label to its array; the result maps
+        each program sink to its float64 output array, identical across
+        backends (all three run the same rewritten program):
+
+        * ``"simulate"``  — the streaming packet simulator (no devices);
+          use ``simulate()`` directly when the timing report is wanted too;
+        * ``"jax"``       — the SPMD ``ppermute`` codelet, shard_mapped
+          over a device mesh built here (needs one device per topology
+          switch — on CPU set ``XLA_FLAGS=--xla_force_host_platform_
+          device_count=N`` before importing jax);
+        * ``"reference"`` — the pure-numpy oracle.
+        """
+        if backend == "reference":
+            return self.execute_reference(inputs)
+        if backend == "simulate":
+            return self.simulate(inputs).outputs
+        if backend != "jax":
+            raise ValueError(
+                f"unknown backend {backend!r}; one of 'simulate', 'jax', 'reference'"
+            )
+
+        import repro._jax_compat  # noqa: F401  (shims before any jax use)
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        n = self._mesh_devices()
+        if jax.device_count() < n:
+            raise RuntimeError(
+                f"backend='jax' needs {n} devices for this topology but only "
+                f"{jax.device_count()} are visible; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+                "before importing jax"
+            )
+        step = self.jax_step(axis_name=axis_name, item_dtype=item_dtype)
+        mesh = jax.make_mesh(
+            (n,), (axis_name,),
+            devices=jax.devices()[:n],
+            axis_types=(jax.sharding.AxisType.Auto,),
+        )
+        # every device gets a full copy of each Store's array; the step
+        # masks to the owning switch itself (emit_step's Store handling)
+        big = {
+            k: jnp.asarray(np.tile(np.atleast_1d(np.asarray(v))[None], (n, 1)))
+            for k, v in inputs.items()
+        }
+        out = jax.shard_map(step, mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name))(big)
+        # the "@all" copy is replicated: row 0 is the collected value
+        return {
+            s: np.asarray(out[s + "@all"])[0].astype(np.float64) for s in self.sinks
+        }
+
+    def _mesh_devices(self) -> int:
+        """Device-axis length the JAX backend needs: switch ids must be
+        mesh indices (``TorusTopology`` / ``as_indexed`` views)."""
+        n = getattr(self.topology, "num_devices", None)
+        if n is not None:
+            return int(n)
+        switches = list(self.topology.switches)
+        if not all(isinstance(s, int) for s in switches):
+            raise TypeError(
+                "backend='jax' needs integer switch ids; compile on a "
+                "TorusTopology or a SwitchTopology.as_indexed() view"
+            )
+        return max(switches) + 1
+
     # ---------------------------------------------------------- inspection --
     @property
     def sinks(self) -> list[str]:

@@ -1,12 +1,14 @@
 """repro.core — the paper's contribution: p4mr for TPU pods.
 
-Public surface:
-    Program / dsl.compile_source     — build p4mr programs (§5)
-    place / build_routes / compile_program — the compiler pipeline (§5)
-    wordcount_step                   — §2 running example on a mesh
+The user-facing framework lives in ``repro.p4mr`` (fluent Job builder,
+Session, ``plan.run``); this package keeps the IR and subsystems it is
+built from:
+    Program / dsl.parse_ast          — p4mr programs + surface syntax (§5)
+    place / build_routes             — placement + routing internals (§5)
     collectives.*                    — in-transit ring/tree/hierarchical
     scenarios.aggregate              — S1/S2/S3 (+native/hierarchical) DP sync
     serialization.*                  — §3 cost model (r = C/e) + chunk model
+    compile_source / compile_program / wordcount_step — deprecated shims
 """
 import repro._jax_compat  # noqa: F401  (installs old-jax API shims)
 

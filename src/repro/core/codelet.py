@@ -29,11 +29,12 @@ def compile_program(
     axis_name: str = "all",
     item_dtype=jnp.float32,
 ):
-    """Deprecated: use ``repro.compiler.compile(...).jax_step()`` (or
-    ``repro.compiler.emit_step`` when placement/routes are precomputed)."""
+    """Deprecated: use ``repro.p4mr.Session(...).compile(job).jax_step()``
+    / ``plan.run(backend="jax")`` (or ``repro.compiler.emit_step`` when
+    placement/routes are precomputed)."""
     warnings.warn(
-        "repro.core.codelet.compile_program is deprecated; use "
-        "repro.compiler.compile(...).jax_step() instead",
+        "repro.core.codelet.compile_program is deprecated; compile through "
+        "repro.p4mr (Session.compile(...).jax_step() or plan.run(backend='jax'))",
         DeprecationWarning,
         stacklevel=2,
     )

@@ -46,7 +46,8 @@ from __future__ import annotations
 
 import json
 import re
-from typing import Any
+import warnings
+from typing import Any, NamedTuple
 
 from repro.core import dag, primitives as prim
 
@@ -75,37 +76,78 @@ _DTYPE_ALIASES = {
 
 
 class DSLSyntaxError(ValueError):
-    pass
+    """Syntax error with source position.
+
+    ``line``/``column`` are 1-based coordinates of the offending token
+    (or of the unlexable character for lex errors) and ``token`` is its
+    text — so frontends (``repro.p4mr.from_source``, editors, tests) can
+    point at the mistake instead of quoting an offset.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        line: int | None = None,
+        column: int | None = None,
+        token: str | None = None,
+    ):
+        if line is not None:
+            message = f"{message} (line {line}, column {column})"
+        super().__init__(message)
+        self.line = line
+        self.column = column
+        self.token = token
 
 
-def _lex(src: str) -> list[tuple[str, str]]:
-    out, pos = [], 0
+class Token(NamedTuple):
+    kind: str
+    value: str
+    line: int
+    column: int
+
+
+def _lex(src: str) -> list[Token]:
+    out: list[Token] = []
+    pos, line, col = 0, 1, 1
     while pos < len(src):
         m = _TOKEN_RE.match(src, pos)
         if not m:
-            raise DSLSyntaxError(f"lex error at offset {pos}: {src[pos:pos+20]!r}")
+            bad = src[pos : pos + 20].split("\n", 1)[0] or src[pos]
+            raise DSLSyntaxError(
+                f"lex error: unexpected {bad!r}", line=line, column=col, token=bad
+            )
+        text = m.group()
+        if m.lastgroup != "ws":
+            out.append(Token(m.lastgroup, text, line, col))
+        newlines = text.count("\n")
+        if newlines:
+            line += newlines
+            col = len(text) - text.rfind("\n")
+        else:
+            col += len(text)
         pos = m.end()
-        kind = m.lastgroup
-        if kind != "ws":
-            out.append((kind, m.group()))
-    out.append(("eof", ""))
+    out.append(Token("eof", "", line, col))
     return out
 
 
 class _Parser:
-    def __init__(self, tokens: list[tuple[str, str]]):
+    def __init__(self, tokens: list[Token]):
         self.toks = tokens
         self.i = 0
 
-    def peek(self) -> tuple[str, str]:
+    def peek(self) -> Token:
         return self.toks[self.i]
 
     def eat(self, kind: str) -> str:
-        k, v = self.toks[self.i]
-        if k != kind:
-            raise DSLSyntaxError(f"expected {kind}, got {k} {v!r} (token {self.i})")
+        tok = self.toks[self.i]
+        if tok.kind != kind:
+            raise DSLSyntaxError(
+                f"expected {kind}, got {tok.kind} {tok.value!r}",
+                line=tok.line, column=tok.column, token=tok.value,
+            )
         self.i += 1
-        return v
+        return tok.value
 
     def parse(self) -> list[dict[str, Any]]:
         stmts = []
@@ -126,9 +168,13 @@ class _Parser:
             dtype = self.eat("ident")
             self.eat("gt")
             self.eat("lparen")
+            loc_tok = self.peek()
             locator = self.eat("string").strip('"')
             if ":" not in locator:
-                raise DSLSyntaxError(f"store locator must be 'host:path', got {locator!r}")
+                raise DSLSyntaxError(
+                    f"store locator must be 'host:path', got {locator!r}",
+                    line=loc_tok.line, column=loc_tok.column, token=loc_tok.value,
+                )
             host, path = locator.split(":", 1)
             items = 0
             if self.peek()[0] == "comma":
@@ -152,15 +198,18 @@ class _Parser:
             self.eat("lparen")
             args: list[Any] = []
             while self.peek()[0] != "rparen":
-                k, v = self.peek()
-                if k == "ident":
+                tok = self.peek()
+                if tok.kind == "ident":
                     args.append(self.eat("ident"))
-                elif k == "string":
+                elif tok.kind == "string":
                     args.append(self.eat("string").strip('"'))
-                elif k == "int":
+                elif tok.kind == "int":
                     args.append(int(self.eat("int")))
                 else:
-                    raise DSLSyntaxError(f"bad argument token {k} {v!r}")
+                    raise DSLSyntaxError(
+                        f"bad argument token {tok.kind} {tok.value!r}",
+                        line=tok.line, column=tok.column, token=tok.value,
+                    )
                 if self.peek()[0] != "rparen":
                     self.eat("comma")  # commas are mandatory between args
             self.eat("rparen")
@@ -237,7 +286,18 @@ def ast_to_program(ast: list[dict[str, Any]]) -> dag.Program:
 
 
 def compile_source(src: str) -> dag.Program:
-    """One-shot: DSL text → validated Program."""
+    """Deprecated one-shot DSL text → validated Program.
+
+    Use ``repro.p4mr.from_source(src)`` (the framework frontend, which
+    also yields the fluent ``Job`` handle) — or compose
+    ``ast_to_program(parse_ast(src))`` when only the Program is wanted.
+    """
+    warnings.warn(
+        "repro.core.dsl.compile_source is deprecated; use "
+        "repro.p4mr.from_source(src) (then .program()) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return ast_to_program(parse_ast(src))
 
 

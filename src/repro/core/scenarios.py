@@ -225,31 +225,36 @@ def compile_scenario(
     same move, applied to the fan-out degree. Note the plan simulator
     prices wire + hop latency only: the paper's S1 penalty (endpoint CPU
     serialize/reduce rates) is out of model, so S1-vs-S2 crossover
-    happens at larger worlds here than in Fig 4.
+    happens at larger worlds here than in Fig 4. Compiles through a
+    ``repro.p4mr.Session`` (the framework API).
     """
-    from repro import compiler, shuffle
+    from repro import p4mr
     from repro.core.topology import TorusTopology
 
     scenario = Scenario(scenario)
     topo = topo if topo is not None else TorusTopology(dims=(world,))
+    sess = p4mr.Session(topo, cost_model=cost_model)
     if scenario is Scenario.S1_HOST:
         sink = topo.attach_switch("d0")
         program = scenario_program(world, scenario, state_width=state_width, shuffle_buckets=1)
-        return compiler.compile(
-            program, topo,
-            passes=("parse", "validate", "lower-shuffle", "place", "route", "emit"),
-            cost_model=cost_model, pins={"R": sink},
+        return sess.compile(
+            program,
+            name="s1",
+            pins={"R": sink},
+            options=p4mr.CompileOptions(
+                passes=("parse", "validate", "lower-shuffle", "place", "route", "emit")
+            ),
         )
-    chain = compiler.compile_best(
-        scenario_program(world, scenario, state_width=state_width),
-        topo, cost_model=cost_model,
+    chain = sess.compile_best(
+        scenario_program(world, scenario, state_width=state_width), name="chain"
     )
     # clamp to the key space before dedup: tiny state_width collapses the
     # candidates, so we don't compile the same 1-bucket program twice
     candidates = sorted({max(1, min(b, state_width)) for b in (world // 2, world)})
-    shuffled = shuffle.arbitrate_buckets(
+    shuffled = sess.arbitrate_buckets(
         lambda b: scenario_program(world, scenario, state_width=state_width, shuffle_buckets=b),
-        topo, candidates, cost_model=cost_model,
+        candidates,
+        name="shuffled",
     )
     return min((chain, shuffled), key=lambda pl: pl.cost.scalar)
 
@@ -276,7 +281,7 @@ def plan_ring_order(
     any order is value-preserving, this one follows the plan's cheap
     edges.
     """
-    from repro import compiler
+    from repro import p4mr
     from repro.core import primitives as prim
     from repro.core.topology import TorusTopology
 
@@ -290,12 +295,11 @@ def plan_ring_order(
     # placement and metric, so the chain-vs-shuffle arbitration of
     # compile_best and the reroute-feedback simulate rounds (which only
     # move routes, fixed after placement) would both be wasted here
-    plan = compiler.compile(
+    plan = p4mr.Session(topo, options="static_ecmp").compile(
         scenario_program(
             world, Scenario.S2_IN_NET, state_width=state_width, hosts=hosts[:world]
         ),
-        topo,
-        passes=compiler.STATIC_ECMP_PASSES,
+        name="ring-order",
     )
     devices = sorted(
         int(plan.placement.switch_of(n.name))

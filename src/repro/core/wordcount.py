@@ -16,6 +16,7 @@ fallback/oracle.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Sequence
 
 import jax
@@ -40,7 +41,7 @@ def wordcount_step(
     *,
     histogram_fn: Callable[[jax.Array, int], jax.Array] | None = None,
 ) -> jax.Array:
-    """SPMD word-count: returns this reducer's (vocab/p,) counts.
+    """Deprecated SPMD word-count: returns this reducer's (vocab/p,) counts.
 
     Runs inside shard_map over ``axis_name``. Device k ends up owning the
     final counts of words [k·vocab/p, (k+1)·vocab/p) — data has been
@@ -49,8 +50,22 @@ def wordcount_step(
     ``repro.shuffle.spmd.shuffle_reduce`` (all_to_all + arrival sum), the
     same KEYBY semantics the compiler lowers to routed bucket edges.
     Requires vocab % p == 0 (pad upstream).
+
+    Deprecated as an entry point: this bespoke wrapper predates the
+    framework API. Express word-count through ``repro.p4mr`` (a fluent
+    ``Job`` compiled by a ``Session``, executed via ``plan.run``), or
+    call ``shuffle.spmd.shuffle_reduce`` on the local histogram directly
+    for the fused device-mesh form.
     """
     from repro.shuffle.spmd import shuffle_reduce
+
+    warnings.warn(
+        "repro.core.wordcount.wordcount_step is deprecated; build the job "
+        "with repro.p4mr (p4mr.job() + Session.compile + plan.run) or call "
+        "repro.shuffle.spmd.shuffle_reduce on the local histogram",
+        DeprecationWarning,
+        stacklevel=2,
+    )
 
     hist = (histogram_fn or local_histogram)(words, vocab)  # map
     return shuffle_reduce(hist, axis_name)  # keyby + reduce in transit
@@ -178,14 +193,17 @@ def wordcount_via_plan(
 
     ``num_buckets=None`` lets the §3 cost model arbitrate the fan-out the
     same way ``compile_best`` arbitrates chain-vs-tree
-    (``shuffle.arbitrate_buckets`` over 1 / p/2 / p buckets).
+    (``shuffle.arbitrate_buckets`` over 1 / p/2 / p buckets). Compiles
+    through a ``repro.p4mr.Session`` (the framework API).
     """
-    from repro import compiler, shuffle
+    from repro import compiler, p4mr, shuffle
     from repro.core.topology import TorusTopology
 
     n = len(word_shards)
     topo = topo if topo is not None else TorusTopology(dims=(max(n, 2),))
     cm = cost_model or compiler.CostModel(max_fanin=4)
+    opts = p4mr.CompileOptions(passes=tuple(passes)) if passes is not None else None
+    sess = p4mr.Session(topo, cost_model=cm, options=opts)
 
     def make(b: int):
         # re-bin declared skew to the candidate bucket count (weights are a
@@ -194,16 +212,10 @@ def wordcount_via_plan(
         return wordcount_shuffle_program(n, vocab, num_buckets=b, weights=w)
 
     if num_buckets is not None:
-        b = min(num_buckets, vocab)
-        if passes is not None:
-            plan = compiler.compile(make(b), topo, passes=passes, cost_model=cm)
-        else:
-            plan = compiler.compile(make(b), topo, cost_model=cm)
+        plan = sess.compile(make(min(num_buckets, vocab)), name="wordcount")
     else:
         candidates = sorted({1, max(1, n // 2), min(n, vocab)})
-        plan = shuffle.arbitrate_buckets(
-            make, topo, candidates, cost_model=cm, passes=passes
-        )
+        plan = sess.arbitrate_buckets(make, candidates, name="wordcount")
     inputs = {
         f"s{i}": wordcount_reference([ws], vocab).astype(np.float64)
         for i, ws in enumerate(word_shards)

@@ -1,0 +1,45 @@
+"""repro.p4mr — the framework API the paper names (§5: "a parallel
+programming framework to help users efficiently program multiple
+switches").
+
+One import surfaces the whole stack:
+
+* **Build** — ``p4mr.job()`` starts a fluent dataflow builder
+  (``Dataset.map(...).key_by(...).reduce("SUM").collect(...)``) that
+  constructs ``dag.Program``s directly; ``from_source`` /
+  ``Job.to_source()`` round-trip with the paper's surface syntax.
+* **Compile** — ``Session`` owns topology + ``CostModel`` + typed
+  ``CompileOptions`` (presets ``unoptimized`` / ``static_ecmp`` /
+  ``default`` / ``autotuned`` over the registered pass pipelines) and
+  compiles many jobs against one fabric.
+* **Execute** — every backend behind one call:
+  ``plan.run(inputs, backend="simulate" | "jax" | "reference")``; and
+  ``session.simulate()`` streams *all* registered jobs' packet trains
+  through the shared switches at once (multi-tenant contention).
+
+    from repro import p4mr
+    from repro.core.topology import TorusTopology
+
+    job = p4mr.job("wordcount")
+    mapped = [job.store(f"s{i}", host=f"d{i}", items=64).key_by(8)
+              for i in range(8)]
+    mapped[0].reduce("SUM", *mapped[1:], label="COUNTS").collect("d0")
+
+    sess = p4mr.Session(TorusTopology(dims=(8,)))
+    plan = sess.compile(job)
+    counts = plan.run(histograms, backend="simulate")   # == "jax" == "reference"
+"""
+from repro.p4mr.builder import Dataset, Job, from_program, from_source, job
+from repro.p4mr.session import CompileOptions, Session, SessionReport, merge_plans
+
+__all__ = [
+    "CompileOptions",
+    "Dataset",
+    "Job",
+    "Session",
+    "SessionReport",
+    "from_program",
+    "from_source",
+    "job",
+    "merge_plans",
+]

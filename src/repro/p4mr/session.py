@@ -1,0 +1,356 @@
+"""``Session`` — one fabric, typed compile options, many jobs.
+
+A ``Session`` owns what the module-level driver calls kept re-threading
+by hand: the target topology, the §3 ``CostModel``, and a typed
+``CompileOptions`` (named presets over the registered pass pipelines
+instead of stringly-typed ``passes=``/kwarg plumbing). Every compile is
+registered under a job name, which is what makes the multi-tenant story
+expressible: ``session.simulate()`` merges every registered plan's
+packet trains into one streamed simulation over the *shared* switches,
+so cross-job queueing — the contention a per-plan ``simulate_timing()``
+cannot see — shows up as ``combined`` vs ``solo`` makespans.
+
+    sess = p4mr.Session(fat_tree_topology(4), options="autotuned")
+    plan_a = sess.compile(job_a)
+    plan_b = sess.compile(job_b, options="static_ecmp")
+    rep = sess.simulate()          # both jobs on the fabric at once
+    rep.combined.makespan_ticks    # >= every rep.solo[...] makespan
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Hashable, Mapping, Sequence
+
+from repro.core import dag
+
+NodeId = Hashable
+
+
+def _preset_passes() -> dict[str, tuple[str, ...]]:
+    from repro import compiler
+
+    return {
+        "unoptimized": compiler.UNOPTIMIZED_PASSES,
+        "static_ecmp": compiler.STATIC_ECMP_PASSES,
+        "default": compiler.DEFAULT_PASSES,
+        "autotuned": compiler.AUTOTUNE_PASSES,
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Typed compile configuration (replaces ad-hoc ``passes=`` tuples and
+    ``reroute_rounds=``/``autotune_rounds=`` kwarg plumbing).
+
+    ``preset`` names a registered pipeline: ``unoptimized`` (the paper's
+    flat parse→place→route), ``static_ecmp`` (optimizing, route-count
+    ECMP only), ``default`` (adds the measured-queueing reroute-feedback
+    loop) or ``autotuned`` (adds the profile-guided hill-climb).
+    ``passes`` overrides the preset with an explicit pipeline; the knob
+    fields map onto the driver's ``options`` dict, and ``extra`` is the
+    escape hatch for pass-specific options not modeled here.
+    """
+
+    preset: str = "default"
+    passes: tuple | None = None
+    reroute_rounds: int | None = None
+    autotune_rounds: int | None = None
+    autotune_actions: tuple[str, ...] | None = None
+    extra: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.passes is None and self.preset not in _preset_passes():
+            raise ValueError(
+                f"unknown preset {self.preset!r}; one of {sorted(_preset_passes())}"
+            )
+        if self.passes is not None:
+            object.__setattr__(self, "passes", tuple(self.passes))
+
+    @classmethod
+    def of(cls, value: "CompileOptions | str | None") -> "CompileOptions":
+        """Coerce ``None`` / a preset name / an instance to options."""
+        if value is None:
+            return cls()
+        if isinstance(value, CompileOptions):
+            return value
+        if isinstance(value, str):
+            return cls(preset=value)
+        raise TypeError(
+            f"expected CompileOptions, a preset name or None, got {type(value).__name__}"
+        )
+
+    def pass_list(self) -> tuple:
+        return self.passes if self.passes is not None else _preset_passes()[self.preset]
+
+    def driver_options(self) -> dict[str, Any]:
+        out = dict(self.extra)
+        if self.reroute_rounds is not None:
+            out["reroute_rounds"] = self.reroute_rounds
+        if self.autotune_rounds is not None:
+            out["autotune_rounds"] = self.autotune_rounds
+        if self.autotune_actions is not None:
+            out["autotune_actions"] = tuple(self.autotune_actions)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionReport:
+    """``Session.simulate()`` result: the shared-fabric streamed timing
+    (``combined``) next to each job's solo timing (``solo``) — the gap is
+    multi-tenant contention. ``outputs`` carries per-job functional
+    results when inputs were supplied."""
+
+    combined: Any  # compiler.SimReport over the merged traffic
+    solo: dict[str, Any]  # job name -> its plan's own SimReport
+    outputs: dict[str, dict] | None = None
+
+    @property
+    def solo_makespan_ticks(self) -> dict[str, int]:
+        return {name: rep.makespan_ticks for name, rep in self.solo.items()}
+
+    @property
+    def contention_ticks(self) -> int:
+        """Combined makespan beyond the slowest job alone (>= 0): what
+        sharing the fabric cost the last finisher."""
+        slowest = max((r.makespan_ticks for r in self.solo.values()), default=0)
+        return self.combined.makespan_ticks - slowest
+
+    def summary(self) -> str:
+        solo = ", ".join(
+            f"{name}={rep.makespan_ticks}t" for name, rep in self.solo.items()
+        )
+        return (
+            f"{len(self.solo)} job(s): combined {self.combined.makespan_ticks}t "
+            f"(solo {solo}; contention +{self.contention_ticks}t)"
+        )
+
+
+def _prefix_node(node, prefix: str):
+    """Rename ``node`` (and its dep references) into ``prefix/``-space."""
+    from repro.core import primitives as prim
+
+    name = f"{prefix}/{node.name}"
+    if isinstance(node, (prim.Concat, prim.Reduce)):
+        return dataclasses.replace(
+            node, name=name, srcs=tuple(f"{prefix}/{s}" for s in node.srcs)
+        )
+    if isinstance(node, prim.Store):
+        return dataclasses.replace(node, name=name)
+    # MapFn / KeyBy / ShuffleBucket / Collect: single ``src`` field
+    return dataclasses.replace(node, name=name, src=f"{prefix}/{node.src}")
+
+
+def merge_plans(plans: Mapping[str, Any]) -> tuple[dag.Program, Any]:
+    """One program + routing table over every plan's traffic, labels
+    prefixed ``jobname/`` so the merged DAG stays label-unique. Programs
+    and routes are structurally untouched — only renamed — so per-flow
+    trains, paths and hop counts are exactly each plan's own; the merge
+    changes nothing but which switch queues the trains now share."""
+    from repro.core.routing import RoutingTable
+
+    nodes, routes = [], []
+    for name, plan in plans.items():
+        for n in plan.program:
+            nodes.append(_prefix_node(n, name))
+        for r in plan.routes.routes:
+            routes.append(
+                dataclasses.replace(
+                    r,
+                    src_label=f"{name}/{r.src_label}",
+                    dst_label=f"{name}/{r.dst_label}",
+                )
+            )
+    return dag.Program.from_nodes(nodes), RoutingTable(routes=routes)
+
+
+class Session:
+    """Compile and execute p4mr jobs against one shared fabric."""
+
+    def __init__(
+        self,
+        topology,
+        *,
+        cost_model=None,
+        options: "CompileOptions | str | None" = None,
+    ):
+        from repro import compiler
+
+        self.topology = topology
+        self.cost_model = cost_model if cost_model is not None else compiler.CostModel()
+        self.options = CompileOptions.of(options)
+        self.plans: dict[str, Any] = {}
+
+    # ------------------------------------------------------------ compile --
+    def _resolve(self, job) -> tuple[Any, str | None]:
+        from repro.p4mr.builder import Job
+
+        if isinstance(job, Job):
+            return job.program(), job.name
+        if isinstance(job, (dag.Program, str, list)):
+            # DSL text parses inside the driver's parse pass; a
+            # DSLSyntaxError (with line/column/token) surfaces unchanged
+            return job, None
+        raise TypeError(
+            f"expected a p4mr Job, Program, DSL text or JSON AST, got {type(job).__name__}"
+        )
+
+    def _register(self, name: str | None, plan, *, derived: str | None = None) -> str:
+        """Record a plan. An explicit ``name`` is a caller-owned key:
+        recompiling under it *replaces* the old plan (no stale twin left
+        for ``simulate`` to double-count). Names derived from the job (or
+        defaulted) are suffixed ``#n`` to stay unique — two default-named
+        jobs are distinct tenants, not a replacement."""
+        if name is not None:
+            self.plans[name] = plan
+            return name
+        base = derived if derived is not None else "job"
+        key, i = base, 0
+        while key in self.plans:
+            i += 1
+            key = f"{base}#{i}"
+        self.plans[key] = plan
+        return key
+
+    def compile(
+        self,
+        job,
+        *,
+        name: str | None = None,
+        pins: dict[str, NodeId] | None = None,
+        options: "CompileOptions | str | None" = None,
+    ):
+        """Compile one job on the session fabric and register its plan.
+
+        ``job`` is a fluent ``Job``, a ``dag.Program``, DSL text or a
+        JSON AST; ``options`` overrides the session-level options for
+        this compile only. An explicit ``name`` is a caller-owned
+        registry key — recompiling under it replaces the previous plan;
+        without one the job's own name is suffixed to stay unique.
+        Returns the ``CompiledPlan``.
+        """
+        from repro import compiler
+
+        opts = CompileOptions.of(options) if options is not None else self.options
+        src, jobname = self._resolve(job)
+        plan = compiler.compile(
+            src,
+            self.topology,
+            passes=opts.pass_list(),
+            cost_model=self.cost_model,
+            pins=pins,
+            options=opts.driver_options(),
+        )
+        self._register(name, plan, derived=jobname)
+        return plan
+
+    def compile_best(
+        self,
+        job,
+        *,
+        name: str | None = None,
+        pins: dict[str, NodeId] | None = None,
+        pipelines: Sequence | None = None,
+        autotune: bool = False,
+        objective: str | None = None,
+        options: "CompileOptions | str | None" = None,
+    ):
+        """``compiler.compile_best`` on the session fabric (cost-model
+        arbitration across candidate pipelines), plan registered.
+
+        The session/``options`` preset names the optimizing candidate:
+        unless ``pipelines`` overrides them, the candidates are that pass
+        list against the flat ``unoptimized`` baseline, and the typed
+        knobs (``reroute_rounds``, …) apply to every candidate compile.
+        """
+        from repro import compiler
+
+        opts = CompileOptions.of(options) if options is not None else self.options
+        if pipelines is None:
+            optimizing = opts.pass_list()
+            baseline = _preset_passes()["unoptimized"]
+            pipelines = (
+                (optimizing,) if optimizing == baseline else (optimizing, baseline)
+            )
+        src, jobname = self._resolve(job)
+        plan = compiler.compile_best(
+            src,
+            self.topology,
+            pipelines=pipelines,
+            cost_model=self.cost_model,
+            pins=pins,
+            autotune=autotune,
+            objective=objective,
+            options=opts.driver_options(),
+        )
+        self._register(name, plan, derived=jobname)
+        return plan
+
+    def arbitrate_buckets(
+        self,
+        program_or_factory,
+        candidates: Sequence[int],
+        *,
+        name: str | None = None,
+        pins: dict[str, NodeId] | None = None,
+        options: "CompileOptions | str | None" = None,
+        objective: str = "streamed",
+    ):
+        """``shuffle.arbitrate_buckets`` under the session's fabric, cost
+        model and options; the winning plan is registered."""
+        from repro import shuffle
+
+        opts = CompileOptions.of(options) if options is not None else self.options
+        plan = shuffle.arbitrate_buckets(
+            program_or_factory,
+            self.topology,
+            candidates,
+            cost_model=self.cost_model,
+            pins=pins,
+            passes=opts.pass_list(),
+            options=opts.driver_options(),
+            objective=objective,
+        )
+        self._register(name, plan)
+        return plan
+
+    # ----------------------------------------------------------- simulate --
+    def simulate(
+        self,
+        inputs: Mapping[str, Mapping] | None = None,
+        *,
+        names: Sequence[str] | None = None,
+    ) -> SessionReport:
+        """Stream every registered job's packet trains through the shared
+        fabric at once (the multi-tenant switch story).
+
+        All jobs inject at tick 0; their trains contend in the same
+        event-ordered switch queues, so the ``combined`` makespan is
+        never below any job's ``solo`` makespan — queues only add delay.
+        ``inputs`` optionally maps job name → per-Store input arrays for
+        functional outputs; ``names`` restricts which jobs share the run.
+        """
+        from repro.compiler.simulator import simulate_timing
+
+        if names is None:
+            picked = dict(self.plans)
+        else:
+            missing = [n for n in names if n not in self.plans]
+            if missing:
+                raise KeyError(
+                    f"no compiled job(s) {missing} in session; have {sorted(self.plans)}"
+                )
+            picked = {n: self.plans[n] for n in names}
+        if not picked:
+            raise ValueError("session has no compiled jobs to simulate")
+        program, routes = merge_plans(picked)
+        combined = simulate_timing(program, routes, self.cost_model)
+        solo = {n: pl.simulate_timing() for n, pl in picked.items()}
+        outputs = None
+        if inputs is not None:
+            unknown = [n for n in inputs if n not in picked]
+            if unknown:
+                raise KeyError(
+                    f"inputs for unknown job(s) {unknown}; have {sorted(picked)}"
+                )
+            outputs = {n: picked[n].execute_reference(inputs[n]) for n in inputs}
+        return SessionReport(combined=combined, solo=solo, outputs=outputs)

@@ -174,6 +174,7 @@ def arbitrate_buckets(
     cost_model=None,
     pins=None,
     passes=None,
+    options=None,
     objective: str = "streamed",
 ):
     """Compile one plan per candidate bucket count, keep the cheapest.
@@ -186,7 +187,9 @@ def arbitrate_buckets(
     static §3 cost; ``objective="static"`` keeps the old analytic-only
     scoring (cheaper: no simulate round per candidate).
     ``program_or_factory`` is either a Program whose KeyBys are rewritten
-    per candidate, or a callable ``(num_buckets) -> Program``.
+    per candidate, or a callable ``(num_buckets) -> Program``; ``options``
+    is the driver's per-pass options dict, applied to every candidate
+    compile.
     """
     from repro import compiler
 
@@ -208,6 +211,7 @@ def arbitrate_buckets(
                 cost_model=cost_model,
                 pins=dict(pins) if pins else None,
                 passes=passes,
+                options=dict(options) if options else None,
             )
         )
     if objective == "static":

@@ -210,6 +210,62 @@ def test_infeasible_rebucket_skips_instead_of_aborting():
     assert skipped and all(a.note for a in skipped)
 
 
+def test_candidate_cache_skips_identical_recompiles():
+    """Satellite: the (action, mutation-params) → makespan cache serves
+    re-proposed mutations (e.g. the same rebucket after an unrelated
+    accept) without recompiling, and the hit-rate lands in the report."""
+    t = topology.TorusTopology(dims=(4, 4))
+    weights = tuple(1.0 / (b + 1) ** 2.0 for b in range(8))
+    prog = wordcount.wordcount_shuffle_program(
+        8, 256, num_buckets=8, weights=weights,
+        hosts=[f"d{i}" for i in range(8)], sink_host="d15",
+    )
+    fb = compiler.compile(prog, t)
+    tuned = autotune.tune(fb, rounds=6)
+    rep = tuned.tuning
+    assert rep.cache_hits > 0
+    assert rep.cache_misses > 0
+    assert 0.0 < rep.cache_hit_rate < 1.0
+    cached = [a for a in rep.actions if a.cached]
+    assert len(cached) == rep.cache_hits
+    # a cached record reports the memoized score (and the makespan from
+    # the first evaluation of the same key) and is never the winner
+    for a in cached:
+        assert a.time_s_after is not None and not a.accepted and a.note == "cache hit"
+        assert a.makespan_ticks_after is not None
+    d = rep.to_dict()
+    assert d["cache_hits"] == rep.cache_hits
+    assert d["cache_hit_rate"] == round(rep.cache_hit_rate, 3)
+    # caching only skips work — the search result is still never worse
+    assert tuned.simulate_timing().time_s <= fb.simulate_timing().time_s * (1 + 1e-9)
+
+
+def test_hill_climb_cache_roundtrip_semantics():
+    """A cache-keyed candidate is built once; the identical key in a later
+    round is recorded as a hit without calling build()."""
+    builds = []
+
+    def propose(x, rnd):
+        # the improving step has a round-specific key; the decoy is
+        # identical every round and must only ever be built once
+        return [
+            autotune.Candidate("step", "-1", lambda x=x: x - 1, cache_key=("step", rnd)),
+            autotune.Candidate(
+                "decoy", "+5", lambda: builds.append(1) or 5.0, cache_key=("decoy",)
+            ),
+        ]
+
+    cache = {}
+    best, score, records = autotune.hill_climb(
+        3.0, objective=float, propose=propose, rounds=3, cache=cache)
+    assert best == 0.0 and score == 0.0
+    assert len(builds) == 1  # decoy built in round 1 only
+    decoys = [r for r in records if r.kind == "decoy"]
+    assert [r.cached for r in decoys] == [False, True, True]
+    assert all(r.score == 5.0 for r in decoys)
+    assert cache[("decoy",)] == 5.0
+
+
 def test_tune_restricted_action_families_and_unknown_action():
     prog, ft = _skewed_shuffle(num_buckets=8, skew=2.0)
     fb = compiler.compile(prog, ft)

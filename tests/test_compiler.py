@@ -52,7 +52,7 @@ def test_compile_accepts_program_and_ast_inputs():
     topo = topology.paper_topology()
     ast = dsl.parse_ast(PAPER_SRC)
     p1 = compiler.compile(ast, topo)
-    prog = dsl.compile_source(PAPER_SRC)
+    prog = dsl.ast_to_program(dsl.parse_ast(PAPER_SRC))
     p2 = compiler.compile(prog, topo)
     assert p1.program.nodes.keys() == p2.program.nodes.keys()
     with pytest.raises(TypeError):
@@ -327,7 +327,7 @@ def test_jax_backend_bitwise_equals_reference_on_wordcount(multidevice):
 def test_codelet_compile_program_is_deprecated_shim():
     from repro.core import placement as plc, routing
 
-    p = dsl.compile_source(dsl.PAPER_SOURCE)
+    p = dsl.ast_to_program(dsl.parse_ast(dsl.PAPER_SOURCE))
     p.collect("OUT", "E", sink_host="h6")
     topo = topology.paper_topology().as_indexed()
     pl = plc.place(p, topo)
@@ -382,10 +382,10 @@ def test_codelet_shim_output_matches_compiler(multidevice):
 
 # ------------------------------------------------------------------- misc --
 def test_program_to_source_round_trips():
-    p = dsl.compile_source(dsl.PAPER_SOURCE)
+    p = dsl.ast_to_program(dsl.parse_ast(dsl.PAPER_SOURCE))
     p.collect("OUT", "E", sink_host="h6")
     src = dsl.program_to_source(p)
-    p2 = dsl.compile_source(src)
+    p2 = dsl.ast_to_program(dsl.parse_ast(src))
     assert p.nodes.keys() == p2.nodes.keys()
     for name in p.nodes:
         assert p.nodes[name].deps == p2.nodes[name].deps
@@ -399,7 +399,7 @@ def test_program_to_source_round_trips_state_width():
     p.collect("OUT", "R", sink_host="h6")
     src = dsl.program_to_source(p)
     assert "SUM<64>(A, B)" in src
-    p2 = dsl.compile_source(src)
+    p2 = dsl.ast_to_program(dsl.parse_ast(src))
     assert p2.nodes["R"].state_width == 64
     assert p2.nodes["A"].items == 8
 

@@ -25,7 +25,7 @@ def test_paper_source_parses_to_expected_ast():
 
 
 def test_paper_program_structure():
-    p = dsl.compile_source(dsl.PAPER_SOURCE)
+    p = dsl.ast_to_program(dsl.parse_ast(dsl.PAPER_SOURCE))
     assert p.nodes["D"].deps == ("A", "B")
     assert p.nodes["E"].deps == ("C", "D")
     assert p.depth() == 3  # store -> D -> E
@@ -36,7 +36,7 @@ def test_paper_program_structure():
 
 
 def test_paper_example_matches_dsl():
-    p1 = dsl.compile_source(dsl.PAPER_SOURCE)
+    p1 = dsl.ast_to_program(dsl.parse_ast(dsl.PAPER_SOURCE))
     p2 = dag.paper_example()
     # same dependency structure on shared labels
     for lbl in "ABCDE":
@@ -49,7 +49,7 @@ def test_syntax_errors():
     with pytest.raises(dsl.DSLSyntaxError):
         dsl.parse_ast("A := SUM(B C);")  # missing comma
     with pytest.raises(dag.ProgramError):
-        dsl.compile_source("D := SUM(A, B);")  # undefined sources
+        dsl.ast_to_program(dsl.parse_ast("D := SUM(A, B);"))  # undefined sources
 
 
 def test_duplicate_and_cycle_rejected():
@@ -73,7 +73,7 @@ def test_extended_ops_parse():
     D := MAX(C, C);
     E := COLLECT(D, "h6");
     '''
-    p = dsl.compile_source(src)
+    p = dsl.ast_to_program(dsl.parse_ast(src))
     assert isinstance(p.nodes["B"], prim.MapFn)
     assert p.nodes["C"].num_buckets == 4
     assert p.nodes["D"].kind is prim.ReduceKind.MAX

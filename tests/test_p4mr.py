@@ -1,0 +1,326 @@
+"""repro.p4mr — fluent Job/Session framework API over the whole stack."""
+import numpy as np
+import pytest
+
+from repro import p4mr
+from repro.core import dag, dsl, primitives as prim, topology, wordcount
+
+
+# ----------------------------------------------------------------- builder --
+def test_builder_constructs_paper_program():
+    job = p4mr.job("paper")
+    a = job.store("A", host="h1", path="path_A")
+    b = job.store("B", host="h2", path="path_B")
+    c = job.store("C", host="h3", path="path_C")
+    c.reduce("SUM", a.reduce("SUM", b, label="D"), label="E").collect("h6", label="OUT")
+    got = job.program()
+    ref = dag.paper_example()
+    assert got.nodes.keys() == ref.nodes.keys()
+    for name in ref.nodes:
+        assert got.nodes[name].deps == ref.nodes[name].deps
+
+
+def test_builder_auto_labels_and_width_inference():
+    job = p4mr.job("wc")
+    keyed = [job.store(host=f"d{i}", items=32).key_by(4) for i in range(3)]
+    out = keyed[0].reduce("SUM", *keyed[1:]).collect("d0")
+    p = job.program()
+    assert {"s0", "s1", "s2", "k0", "k1", "k2", "r0"} <= set(p.nodes)
+    # reduce width inferred from the stores' declared cardinality, so the
+    # KEYBY-fed reduce is lowerable without restating the key space
+    assert p.nodes["r0"].state_width == 32
+    assert isinstance(p.nodes[out.label], prim.Collect)
+
+
+def test_builder_rejects_cross_job_and_unknown_kind():
+    a = p4mr.job("a").store(host="d0", items=4)
+    b = p4mr.job("b").store(host="d0", items=4)
+    with pytest.raises(ValueError, match="belongs to job"):
+        a.reduce("SUM", b)
+    with pytest.raises(ValueError, match="unknown reduce kind"):
+        a.reduce("AVG")
+    with pytest.raises(dag.ProgramError):
+        p4mr.job("empty").program()
+
+
+def test_builder_round_trips_through_surface_syntax():
+    job = p4mr.job("wc")
+    keyed = [job.store(f"s{i}", host=f"d{i}", items=16).key_by(4) for i in range(4)]
+    keyed[0].reduce("SUM", *keyed[1:], label="COUNTS").collect("d3", label="OUT")
+    src = job.to_source()
+    back = p4mr.from_source(src, name="wc-reparsed")
+    assert back.program() == job.program()
+    # and the printed form is itself a fixed point
+    assert back.to_source() == src
+
+
+def test_dsl_source_fixed_point_for_shuffle_syntax():
+    """program_to_source ∘ ast_to_program ∘ parse_ast is a fixed point on
+    KEYBY / BUCKET / CONCAT programs (satellite)."""
+    src = (
+        'A := store<uint_64>("ip_h1:path", 8);\n'
+        "K := KEYBY(A, 2);\n"
+        "B0 := BUCKET(A, 0, 2, 0, 4);\n"
+        "B1 := BUCKET(A, 1, 2, 4, 4);\n"
+        "R0 := SUM<4>(B0);\n"
+        "R1 := SUM<4>(B1);\n"
+        "R := CONCAT(R0, R1);\n"
+        'OUT := COLLECT(R, "h6");\n'
+    )
+    printed = dsl.program_to_source(dsl.ast_to_program(dsl.parse_ast(src)))
+    again = dsl.program_to_source(dsl.ast_to_program(dsl.parse_ast(printed)))
+    assert printed == again
+    # structure survives: same nodes, same deps
+    p1, p2 = dsl.ast_to_program(dsl.parse_ast(src)), dsl.ast_to_program(dsl.parse_ast(printed))
+    assert p1 == p2
+
+
+# -------------------------------------------------------------- DSL errors --
+def test_dsl_syntax_error_carries_position_and_token():
+    src = 'A := store<uint_64>("h1:p");\nB := SUM(A C);\n'
+    with pytest.raises(dsl.DSLSyntaxError) as ei:
+        dsl.parse_ast(src)
+    err = ei.value
+    assert err.line == 2
+    assert err.token == "C"
+    assert err.column == src.splitlines()[1].index("C") + 1
+    assert "line 2" in str(err)
+
+
+def test_dsl_lex_error_carries_position():
+    with pytest.raises(dsl.DSLSyntaxError) as ei:
+        dsl.parse_ast("A := SUM(B);\n% := nope;\n")
+    assert ei.value.line == 2 and ei.value.column == 1
+    assert ei.value.token.startswith("%")
+
+
+def test_from_source_surfaces_dsl_error_unchanged():
+    with pytest.raises(dsl.DSLSyntaxError) as ei:
+        p4mr.from_source("A := SUM(B C);")
+    assert ei.value.line == 1 and ei.value.token == "C"
+
+
+# ----------------------------------------------------------------- options --
+def test_compile_options_presets_map_to_pass_lists():
+    from repro import compiler
+
+    assert p4mr.CompileOptions.of("default").pass_list() == compiler.DEFAULT_PASSES
+    assert p4mr.CompileOptions.of("static_ecmp").pass_list() == compiler.STATIC_ECMP_PASSES
+    assert p4mr.CompileOptions.of("autotuned").pass_list() == compiler.AUTOTUNE_PASSES
+    assert p4mr.CompileOptions.of("unoptimized").pass_list() == compiler.UNOPTIMIZED_PASSES
+    assert p4mr.CompileOptions.of(None) == p4mr.CompileOptions()
+    explicit = p4mr.CompileOptions(passes=["parse", "validate", "place", "route", "emit"])
+    assert explicit.pass_list() == ("parse", "validate", "place", "route", "emit")
+    with pytest.raises(ValueError, match="unknown preset"):
+        p4mr.CompileOptions(preset="warp")
+    with pytest.raises(TypeError):
+        p4mr.CompileOptions.of(42)
+    opts = p4mr.CompileOptions(reroute_rounds=0, autotune_rounds=2, extra={"x": 1})
+    assert opts.driver_options() == {"x": 1, "reroute_rounds": 0, "autotune_rounds": 2}
+
+
+def test_session_compile_applies_options():
+    sess = p4mr.Session(topology.paper_topology(), options="static_ecmp")
+    src = dsl.PAPER_SOURCE + 'OUT := COLLECT(E, "h6");\n'
+    plan = sess.compile(src, name="static")
+    assert [r.name for r in plan.trace] == list(p4mr.CompileOptions.of("static_ecmp").pass_list())
+    # per-compile override beats the session default
+    full = sess.compile(src, name="full", options="default")
+    assert any(r.name == "reroute-feedback" for r in full.trace)
+    assert not any(r.name == "reroute-feedback" for r in plan.trace)
+    assert set(sess.plans) == {"static", "full"}
+    with pytest.raises(TypeError):
+        sess.compile(42)
+
+
+def test_session_compile_best_honors_options():
+    src = dsl.PAPER_SOURCE + 'OUT := COLLECT(E, "h6");\n'
+    sess = p4mr.Session(topology.paper_topology(), options="static_ecmp")
+    plan = sess.compile_best(src, name="best")
+    # candidates were (static_ecmp, unoptimized): whichever won, the
+    # measured-queueing reroute loop never ran
+    assert not any(r.name == "reroute-feedback" for r in plan.trace)
+    # ...and the default preset still arbitrates the full pipeline
+    full = sess.compile_best(src, name="full", options="default")
+    assert any(r.name == "reroute-feedback" for r in full.trace)
+    # typed knobs reach every candidate compile (reroute_rounds=0 disables
+    # the loop even inside the default pipeline)
+    off = sess.compile_best(
+        src, name="off",
+        options=p4mr.CompileOptions(preset="default", reroute_rounds=0),
+    )
+    rec = next(r for r in off.trace if r.name == "reroute-feedback")
+    assert "disabled" in rec.summary
+
+
+# ------------------------------------------------------------ run backends --
+def test_plan_run_backends_agree_in_process():
+    vocab, n = 32, 4
+    job = p4mr.job("wc")
+    keyed = [job.store(f"s{i}", host=f"d{i}", items=vocab).key_by(4) for i in range(n)]
+    keyed[0].reduce("SUM", *keyed[1:], label="COUNTS").collect("d0", label="OUT")
+    plan = p4mr.Session(topology.TorusTopology(dims=(n,))).compile(job)
+    rs = np.random.RandomState(11)
+    shards = [rs.randint(0, vocab, (40,)).astype(np.int32) for _ in range(n)]
+    hists = {f"s{i}": wordcount.wordcount_reference([w], vocab).astype(np.float64)
+             for i, w in enumerate(shards)}
+    sim = plan.run(hists, backend="simulate")
+    ref = plan.run(hists, backend="reference")
+    np.testing.assert_array_equal(sim["OUT"], ref["OUT"])
+    np.testing.assert_array_equal(
+        sim["OUT"].astype(np.int64), wordcount.wordcount_reference(shards, vocab))
+    with pytest.raises(ValueError, match="unknown backend"):
+        plan.run(hists, backend="fpga")
+
+
+def test_plan_run_jax_backend_needs_indexed_switches():
+    src = dsl.PAPER_SOURCE + 'OUT := COLLECT(E, "h6");\n'
+    plan = p4mr.Session(topology.paper_topology()).compile(src)
+    with pytest.raises(TypeError, match="integer switch ids"):
+        plan.run({}, backend="jax")
+
+
+def test_quickstart_word_count_bit_identical_across_backends(multidevice):
+    """Acceptance: the quickstart's fluent-builder word-count produces
+    bit-identical output on simulate / jax / reference, and matches the
+    legacy ``wordcount_step`` device-mesh path."""
+    out = multidevice("""
+    import warnings
+    from functools import partial
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro import p4mr
+    from repro.core import wordcount as wc
+    from repro.core.topology import TorusTopology
+
+    n, vocab = 8, 64
+    rs = np.random.RandomState(4)
+    shards = [rs.randint(0, vocab, size=(120,)).astype(np.int32) for _ in range(n)]
+
+    job = p4mr.job("wordcount")
+    mapped = [job.store(f"s{i}", host=f"d{i}", items=vocab).key_by(n)
+              for i in range(n)]
+    mapped[0].reduce("SUM", *mapped[1:], label="COUNTS").collect("d0", label="OUT")
+    plan = p4mr.Session(TorusTopology(dims=(n,))).compile(job)
+
+    hists = {f"s{i}": wc.wordcount_reference([ws], vocab).astype(np.float64)
+             for i, ws in enumerate(shards)}
+    outs = {b: plan.run(hists, backend=b)["OUT"]
+            for b in ("simulate", "jax", "reference")}
+    np.testing.assert_array_equal(outs["simulate"], outs["jax"])
+    np.testing.assert_array_equal(outs["simulate"], outs["reference"])
+    np.testing.assert_array_equal(
+        outs["simulate"].astype(np.int64), wc.wordcount_reference(shards, vocab))
+
+    mesh = jax.make_mesh((n,), ("net",), axis_types=(jax.sharding.AxisType.Auto,))
+    @partial(jax.shard_map, mesh=mesh, in_specs=P("net"), out_specs=P("net"))
+    def legacy(words):
+        return wc.wordcount_step(words[0], vocab, "net")[None]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy_counts = np.asarray(legacy(jnp.asarray(np.stack(shards)))).reshape(-1)
+    np.testing.assert_array_equal(outs["simulate"].astype(legacy_counts.dtype),
+                                  legacy_counts)
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+# --------------------------------------------------------------- multi-job --
+def _tenant(name: str, hosts, sink: str, vocab: int = 64) -> p4mr.Job:
+    job = p4mr.job(name)
+    keyed = [job.store(f"s{i}", host=h, items=vocab).key_by(4)
+             for i, h in enumerate(hosts)]
+    keyed[0].reduce("SUM", *keyed[1:], label="R").collect(sink, label="OUT")
+    return job
+
+
+def test_two_job_session_combined_makespan_sees_contention():
+    """Acceptance: two jobs on one fat-tree — the combined streamed
+    makespan is >= each job's solo makespan (queues only add delay)."""
+    sess = p4mr.Session(topology.fat_tree_topology(4))
+    sess.compile(_tenant("a", [f"h{i}" for i in range(4)], "h15"))
+    sess.compile(_tenant("b", [f"h{i}" for i in range(4, 8)], "h12"))
+    rep = sess.simulate()
+    assert set(rep.solo) == {"a", "b"}
+    for name, solo in rep.solo.items():
+        assert rep.combined.makespan_ticks >= solo.makespan_ticks, name
+    assert rep.contention_ticks >= 0
+    assert "combined" in rep.summary()
+    # restricting to one job degenerates to that job's own timing
+    alone = sess.simulate(names=["a"])
+    assert alone.combined.makespan_ticks == alone.solo["a"].makespan_ticks
+
+
+def test_session_arbitrate_buckets_honors_typed_knobs():
+    sess = p4mr.Session(
+        topology.TorusTopology(dims=(4,)),
+        options=p4mr.CompileOptions(reroute_rounds=0),
+    )
+    plan = sess.arbitrate_buckets(
+        lambda b: wordcount.wordcount_shuffle_program(4, 16, num_buckets=b),
+        [1, 2, 4],
+        name="wc",
+    )
+    # the knob reached every candidate compile: the winner's feedback
+    # loop was disabled, not merely converged
+    assert plan.feedback is not None and plan.feedback["rounds"] == 0
+    assert "wc" in sess.plans
+    sess = p4mr.Session(topology.fat_tree_topology(4))
+    job = _tenant("t", [f"h{i}" for i in range(4)], "h15")
+    first = sess.compile(job, name="wc")
+    second = sess.compile(job, name="wc", options="static_ecmp")  # recompile: replaces
+    assert set(sess.plans) == {"wc"}
+    assert sess.plans["wc"] is second and first is not second
+    # simulate sees exactly one copy of the job's traffic
+    rep = sess.simulate()
+    assert set(rep.solo) == {"wc"}
+    # derived (job-name) keys stay unique instead of replacing: two
+    # default-named jobs are distinct tenants
+    sess.compile(job)
+    sess.compile(job)
+    assert {"t", "t#1"} <= set(sess.plans)
+
+
+def test_session_simulate_outputs_and_errors():
+    sess = p4mr.Session(topology.fat_tree_topology(4))
+    with pytest.raises(ValueError, match="no compiled jobs"):
+        sess.simulate()
+    sess.compile(_tenant("a", [f"h{i}" for i in range(4)], "h15", vocab=8))
+    inputs = {"a": {f"s{i}": np.full((8,), float(i)) for i in range(4)}}
+    rep = sess.simulate(inputs)
+    np.testing.assert_array_equal(rep.outputs["a"]["OUT"], np.full((8,), 6.0))
+    with pytest.raises(KeyError, match="unknown job"):
+        sess.simulate({"nope": {}})
+    with pytest.raises(KeyError, match="no compiled job"):
+        sess.simulate(names=["nope"])
+
+
+def test_merge_plans_preserves_per_job_structure():
+    sess = p4mr.Session(topology.fat_tree_topology(4))
+    pa = sess.compile(_tenant("a", [f"h{i}" for i in range(4)], "h15"))
+    pb = sess.compile(_tenant("b", [f"h{i}" for i in range(4, 8)], "h12"))
+    program, routes = p4mr.merge_plans({"a": pa, "b": pb})
+    assert len(program) == len(pa.program) + len(pb.program)
+    assert routes.total_hops == pa.routes.total_hops + pb.routes.total_hops
+    assert {n.name.split("/", 1)[0] for n in program} == {"a", "b"}
+
+
+# ------------------------------------------------------------ deprecations --
+def test_legacy_shims_emit_deprecation_warnings():
+    with pytest.warns(DeprecationWarning, match="p4mr"):
+        dsl.compile_source(dsl.PAPER_SOURCE)
+
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("all",), axis_types=(jax.sharding.AxisType.Auto,))
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=P("all"), out_specs=P("all"))
+    def legacy(words):
+        return wordcount.wordcount_step(words[0], 4, "all")[None]
+
+    with pytest.warns(DeprecationWarning, match="p4mr"):
+        legacy(jnp.zeros((1, 6), jnp.int32))

@@ -6,7 +6,7 @@ from repro.core import dag, dsl, placement as plc, routing, topology as topo
 
 
 def _paper_setup():
-    p = dsl.compile_source(dsl.PAPER_SOURCE)
+    p = dsl.ast_to_program(dsl.parse_ast(dsl.PAPER_SOURCE))
     p.collect("OUT", "E", sink_host="h6")
     t = topo.paper_topology()
     return p, t

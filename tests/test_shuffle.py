@@ -99,7 +99,7 @@ def test_lowered_program_prints_and_reparses():
     plan = compiler.compile(_map_keyby_reduce(), topology.TorusTopology(dims=(4,)))
     src = dsl.program_to_source(plan.program)
     assert "BUCKET(" in src and "CONCAT(" in src
-    p2 = dsl.compile_source(src)
+    p2 = dsl.ast_to_program(dsl.parse_ast(src))
     assert p2.nodes.keys() == plan.program.nodes.keys()
     for name in p2.nodes:
         assert p2.nodes[name].deps == plan.program.nodes[name].deps

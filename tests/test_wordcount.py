@@ -37,7 +37,7 @@ def test_paper_dag_codelet_execution(multidevice):
     from jax.sharding import PartitionSpec as P
     from repro.core import codelet, dsl, placement as plc, routing, topology
 
-    prog = dsl.compile_source(dsl.PAPER_SOURCE)
+    prog = dsl.ast_to_program(dsl.parse_ast(dsl.PAPER_SOURCE))
     prog.collect("OUT", "E", sink_host="h6")
     t = topology.paper_topology()
     name2id = {f"S{i+1}": i for i in range(6)}
