@@ -95,6 +95,11 @@ def _case(topo_name: str, num_buckets: int, skew: float) -> dict:
         "wire_bytes": round(rep_t.wire_bytes, 1),
         "improvement_pct_vs_feedback": round(report.improvement_pct, 2),
         "actions_evaluated": len(report.actions),
+        # candidate-cache effectiveness (mutation-only keys): fat-tree
+        # cells used to sit at 0% because route churn leaked into the key
+        "cache_hits": report.cache_hits,
+        "cache_misses": report.cache_misses,
+        "cache_hit_rate": round(report.cache_hit_rate, 3),
         "accepted_by_kind": report.accepted_by_kind(),
         "tuning": report.to_dict(),
     }

@@ -1,0 +1,128 @@
+"""Simulator-engine benchmark: event-ordered reference vs vectorized
+tick-synchronous VOQ core on k∈{4,8} fat-tree shuffles (≥1e5 packets).
+
+Each cell compiles one word-count shuffle to static-ECMP routes, builds
+the packet-train spec once, then times both engines on the *same* spec —
+so the measurement is pure engine time, excluding compile and train
+construction. Two train modes per cell:
+
+* ``cap`` — the production default (``CostModel.sim_train_cap`` batches
+  long trains); what autotune/reroute evaluations actually pay;
+* ``per_packet`` — ``sim_train_cap`` lifted so every packet is its own
+  event; the regime where the event engine's per-packet Python loop is
+  quadratic-ish in traffic and the dense engine's advantage peaks.
+
+Writes a BENCH_simulator.json artifact. CI's bench-smoke gates
+``speedup_vs_event`` as a higher-is-better metric (a same-machine
+wall-clock *ratio*, so it is stable across runner speeds, unlike the
+absolute packets/sec fields, which are reported but not gated) and the
+cross-engine makespan agreement via ``makespan_pct_diff``.
+
+    PYTHONPATH=src:. python benchmarks/run.py simulator
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from repro import compiler
+from repro.compiler.simulator import build_flow_spec, simulate_timing
+from repro.core import topology, wordcount
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_simulator.json")
+
+# (name, k, mappers, vocab, buckets, skew) — sized so even the k=4 cell
+# streams >=1e5 packets. The uniform k=8 cell is the acceptance headline
+# (the vectorized core's step count scales with makespan, so uniform
+# traffic is its best case); the skewed cells pin the makespan agreement
+# where contention actually bites.
+CELLS = (
+    ("fat_tree_k4", 4, 8, 4096, 8, 2.0),
+    ("fat_tree_k8", 8, 16, 8192, 16, 0.0),
+    ("fat_tree_k8", 8, 16, 8192, 16, 2.0),
+)
+REPEATS = 3
+PER_PACKET_CAP = 10 ** 9  # lifts train batching entirely
+
+
+def _weights(num_buckets: int, skew: float) -> tuple[float, ...] | None:
+    if skew == 0.0:
+        return None
+    return tuple(1.0 / (b + 1) ** skew for b in range(num_buckets))
+
+
+def _best_s(fn) -> float:
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _mode(plan, cost_model, mode: str) -> dict:
+    spec = build_flow_spec(plan.program, plan.routes, cost_model)
+
+    def run(eng):
+        return simulate_timing(
+            plan.program, plan.routes, cost_model, engine=eng, spec=spec)
+    rep_e, rep_v = run("event"), run("vectorized")
+    s_e, s_v = _best_s(lambda: run("event")), _best_s(lambda: run("vectorized"))
+    pct = 100.0 * abs(rep_v.makespan_ticks - rep_e.makespan_ticks) / rep_e.makespan_ticks
+    return {
+        "mode": mode,
+        "total_packets": spec.total_packets,
+        "train_events": sum(len(f.train) for f in spec.flows),
+        "event_ms": round(s_e * 1e3, 2),
+        "vectorized_ms": round(s_v * 1e3, 2),
+        "packets_per_sec_event": round(spec.total_packets / s_e),
+        "packets_per_sec_vectorized": round(spec.total_packets / s_v),
+        "speedup_vs_event": round(s_e / s_v, 2),
+        "makespan_ticks_event": rep_e.makespan_ticks,
+        "makespan_ticks_vectorized": rep_v.makespan_ticks,
+        "makespan_pct_diff": round(pct, 3),
+    }
+
+
+def _case(name, k, mappers, vocab, buckets, skew) -> list[dict]:
+    topo = topology.fat_tree_topology(k)
+    prog = wordcount.wordcount_shuffle_program(
+        mappers, vocab, num_buckets=buckets, weights=_weights(buckets, skew),
+        hosts=[f"h{i}" for i in range(mappers)], sink_host=f"h{len(topo.hosts) - 1}",
+    )
+    plan = compiler.compile(prog, topo, passes=compiler.STATIC_ECMP_PASSES)
+    records = []
+    for mode, cm in (
+        ("cap", plan.cost_model),
+        ("per_packet", dataclasses.replace(plan.cost_model, sim_train_cap=PER_PACKET_CAP)),
+    ):
+        rec = {"name": f"{name}.b{buckets}.skew{skew}.{mode}", "topology": name}
+        rec.update(_mode(plan, cm, mode))
+        records.append(rec)
+    return records
+
+
+def run() -> list[tuple[str, float, str]]:
+    records = []
+    for cell in CELLS:
+        records.extend(_case(*cell))
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(records, f, indent=2)
+
+    rows = []
+    for r in records:
+        rows.append((
+            f"simulator.{r['name']}", r["vectorized_ms"] * 1e3,
+            f"event={r['event_ms']}ms vectorized={r['vectorized_ms']}ms "
+            f"speedup={r['speedup_vs_event']}x "
+            f"pkts/s={r['packets_per_sec_vectorized']:.3g} "
+            f"packets={r['total_packets']} "
+            f"makespan={r['makespan_ticks_event']}/{r['makespan_ticks_vectorized']}t "
+            f"(d={r['makespan_pct_diff']}%)",
+        ))
+    rows.append(("simulator.artifact", 0.0, f"wrote {os.path.basename(OUT_PATH)}"))
+    return rows

@@ -37,6 +37,13 @@ GATED_METRICS = (
     "queue_delay_ticks_static",
     "wire_bytes",
 )
+# higher-is-better metrics: the vectorized simulator's throughput edge.
+# ``speedup_vs_event`` is a same-machine wall-clock *ratio* (vectorized
+# vs event engine on identical inputs), so unlike the absolute
+# ``packets_per_sec_*`` fields — reported but deliberately ungated, they
+# track runner speed — it is comparable across CI machines. A shrinking
+# ratio means the vectorized core itself got slower.
+HIGHER_IS_BETTER = ("speedup_vs_event",)
 # fields that identify a record across runs (all that are present)
 IDENTITY = ("name", "topology", "num_buckets", "skew")
 ABS_EPSILON = 2.0  # ignore sub-tick jitter on tiny integer metrics
@@ -67,6 +74,17 @@ def check(baseline: list[dict], current: list[dict], tolerance: float) -> list[s
                     f"{label}: {metric} regressed {b:g} -> {c:g} "
                     f"(+{100.0 * (c - b) / max(b, 1e-12):.1f}%, tolerance "
                     f"{100.0 * tolerance:.0f}%)"
+                )
+        for metric in HIGHER_IS_BETTER:
+            if metric not in base or metric not in cur:
+                continue
+            b, c = float(base[metric]), float(cur[metric])
+            compared += 1
+            if c < b * (1.0 - tolerance):
+                errors.append(
+                    f"{label}: {metric} regressed {b:g} -> {c:g} "
+                    f"({100.0 * (c - b) / max(b, 1e-12):.1f}%, tolerance "
+                    f"-{100.0 * tolerance:.0f}%)"
                 )
     if compared == 0:
         errors.append("no comparable metrics found between baseline and current")

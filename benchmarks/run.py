@@ -17,6 +17,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   bench_collectives     — in-transit vs endpoint aggregation (TPU form)
   bench_kernels         — Pallas kernel oracles + allclose
   bench_roofline        — §Roofline aggregation of the dry-run sweeps
+  bench_simulator       — event vs vectorized engine throughput, k∈{4,8}
 """
 from __future__ import annotations
 
@@ -33,6 +34,7 @@ from benchmarks import (
     bench_scenarios,
     bench_serialization,
     bench_shuffle,
+    bench_simulator,
 )
 
 MODULES = [
@@ -45,6 +47,7 @@ MODULES = [
     ("collectives", bench_collectives),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
+    ("simulator", bench_simulator),
 ]
 
 

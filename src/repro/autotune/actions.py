@@ -62,22 +62,16 @@ def _path_str(path: tuple[NodeId, ...]) -> str:
     return "→".join(str(s) for s in path)
 
 
-# Cache-key fingerprints: every Candidate carries a hashable key over
-# (action family, mutation params, everything its build reads). Within one
-# tune run the topology and cost model are fixed, so equal keys rebuild
-# byte-equal plans — the hill-climb's candidate cache skips re-simulating
-# them when a later round re-proposes the identical mutation.
-def _program_fp(program) -> tuple:
-    """IR nodes are frozen dataclasses, hence hashable as-is."""
-    return tuple(program.nodes.values())
-
-
-def _pins_fp(pins: dict) -> tuple:
-    return tuple(sorted(pins.items(), key=lambda kv: str(kv[0])))
-
-
-def _routes_fp(routes: RoutingTable) -> tuple:
-    return tuple((r.src_label, r.dst_label, r.path) for r in routes.routes)
+# Cache keys: every Candidate carries a hashable key naming the MUTATION
+# alone — ("reroute", flow, path), ("move-reducer", label, switch), … —
+# not the incumbent state it mutates. Earlier keys fingerprinted the full
+# routing table / program, which churn after every accepted action, so
+# identical re-proposed mutations never hit (BENCH_autotune measured 0/31
+# hits on fat-tree cells). A hit serves the score measured earlier in the
+# SAME climb and is never accepted (see ``search.hill_climb``), so the
+# never-worse guarantee is untouched; the accepted tradeoff is that a
+# mutation whose value changed under a new incumbent is not re-measured
+# within that climb.
 
 
 def _with_routes(plan: CompiledPlan, routes: RoutingTable) -> CompiledPlan:
@@ -92,21 +86,27 @@ def reroute_candidates(
 ) -> list[Candidate]:
     """Detour the flows most exposed to measured queueing.
 
-    Flows are ranked by (queued packets along their path × their own
-    packet train length); for each of the top ``max_flows`` every
-    k-shortest-paths alternative (including strictly longer ones) becomes
-    a candidate replacing just that flow's path.
+    Flows are ranked by exposure × their own packet train length, where
+    exposure is the measured contention along the flow's path: per-switch
+    queued packets and buffer drops, plus the VOQ engine's per-port peak
+    depth on the exact links the flow crosses (a flow sharing a switch
+    through an uncontended port no longer looks hot). For each of the top
+    ``max_flows`` every k-shortest-paths alternative (including strictly
+    longer ones) becomes a candidate replacing just that flow's path.
     """
     rep = plan.simulate_timing()
     queued = rep.queued_batches
-    if not queued:
+    drops = rep.switch_drops()
+    voq = rep.voq_depth
+    if not queued and not drops:
         return []
     traffic = plan.cost_model.traffic(plan.program)
     scored = []
     for idx, r in enumerate(plan.routes.routes):
         if r.hops == 0:
             continue
-        exposure = sum(queued.get(sw, 0) for sw in r.path)
+        exposure = sum(queued.get(sw, 0) + drops.get(sw, 0.0) for sw in r.path)
+        exposure += sum(voq.get(link, 0.0) for link in zip(r.path, r.path[1:]))
         if exposure <= 0:
             continue
         pk = traffic[r.src_label].packets if r.src_label in traffic else 1
@@ -114,7 +114,6 @@ def reroute_candidates(
     scored.sort(key=lambda t: (-t[0], t[1]))
 
     out: list[Candidate] = []
-    prog_fp, routes_fp = _program_fp(plan.program), _routes_fp(plan.routes)
     for _, idx in scored[:max_flows]:
         r = plan.routes.routes[idx]
         try:
@@ -138,7 +137,8 @@ def reroute_candidates(
                         f"[{_path_str(r.path)}] ⇒ {len(alt) - 1} hops [{_path_str(alt)}]"
                     ),
                     build=build,
-                    cache_key=("reroute", prog_fp, routes_fp, idx, alt),
+                    # the mutation alone: which flow, which new path
+                    cache_key=("reroute", r.src_label, r.dst_label, idx, alt),
                 )
             )
     return out
@@ -167,31 +167,37 @@ def move_reducer_candidates(
     """Relocate the reducers sitting on the most-queued switches.
 
     Targets are chosen by the simulator's per-switch queue-depth
-    histograms: hottest reducers move, coldest switches (by queued packets,
-    then max backlog) receive. The rebuild recompiles the lowered program
-    under the mutated pin through place → route → reroute-feedback, so
-    routes follow the reducer; a move that overflows the target switch's
-    memory budget is skipped, not fatal.
+    histograms plus measured buffer drops at the switch (packets a finite
+    buffer discarded are stronger evidence of overload than backlog
+    alone): hottest reducers move, coldest switches (by queued+dropped
+    packets, then max backlog) receive. The rebuild recompiles the
+    lowered program under the mutated pin through place → route →
+    reroute-feedback, so routes follow the reducer; a move that overflows
+    the target switch's memory budget is skipped, not fatal.
     """
     reducers = _pinned_reducers(plan)
     if not reducers:
         return []
     rep = plan.simulate_timing()
     queued, depth = rep.queued_batches, rep.max_queue_depth
+    drops = rep.switch_drops()
+
+    def pressure(sw) -> float:
+        return queued.get(sw, 0) + drops.get(sw, 0.0)
 
     def heat(label: str) -> tuple:
         sw = plan.placement.switch_of(label)
-        return (-queued.get(sw, 0), -depth.get(sw, 0), label)
+        return (-pressure(sw), -depth.get(sw, 0), label)
 
     hot = sorted(reducers, key=heat)[:max_reducers]
     out: list[Candidate] = []
     for label in hot:
         cur = plan.placement.switch_of(label)
-        if queued.get(cur, 0) <= 0:
+        if pressure(cur) <= 0:
             continue  # nothing measured against this switch: leave it
         targets = sorted(
             (sw for sw in plan.topology.switches if sw != cur),
-            key=lambda sw: (queued.get(sw, 0), depth.get(sw, 0), str(sw)),
+            key=lambda sw: (pressure(sw), depth.get(sw, 0), str(sw)),
         )[:max_switches]
         for sw in targets:
 
@@ -218,13 +224,8 @@ def move_reducer_candidates(
                     kind="move-reducer",
                     detail=f"{label}: {cur} ⇒ {sw} (queued {queued.get(cur, 0)} pkt)",
                     build=build,
-                    # the rebuild recompiles plan.program under the mutated
-                    # pin set: program + pins determine it fully
-                    cache_key=(
-                        "move-reducer",
-                        _program_fp(plan.program),
-                        _pins_fp({**plan.pins, label: sw}),
-                    ),
+                    # the mutation alone: which reducer, which new switch
+                    cache_key=("move-reducer", label, sw),
                 )
             )
     return out
@@ -316,7 +317,6 @@ def rebucket_candidates(plan: CompiledPlan, *, n_sim: int = 2) -> list[Candidate
     ranked = sorted(counts, key=lambda b: (bottleneck(b), b))[:n_sim]
 
     out: list[Candidate] = []
-    src_fp, pins_fp = _program_fp(src), _pins_fp(plan.user_pins)
     for b in ranked:
 
         def build(b=b):
@@ -328,8 +328,8 @@ def rebucket_candidates(plan: CompiledPlan, *, n_sim: int = 2) -> list[Candidate
                 detail=f"{cur_b} ⇒ {b} buckets (analytic bottleneck {bottleneck(b)} pkt)",
                 build=build,
                 # full recompile from the pre-lowering source program at
-                # bucket count b under the user pins — nothing else read
-                cache_key=("rebucket", src_fp, pins_fp, b),
+                # bucket count b — src and user pins are fixed per climb
+                cache_key=("rebucket", b),
             )
         )
     return out
@@ -390,12 +390,9 @@ def reweight_candidates(plan: CompiledPlan) -> list[Candidate]:
                 f"(hot bucket {hot}: {measured.get(hot, 0)} pkt)"
             ),
             build=build,
-            cache_key=(
-                "reweight",
-                _program_fp(src),
-                _pins_fp(plan.user_pins),
-                tuple(learned),
-            ),
+            # the learned weight vector is the mutation; src and user
+            # pins are fixed per climb
+            cache_key=("reweight", tuple(learned)),
         )
     ]
 

@@ -33,11 +33,11 @@ class Candidate:
     """One proposed mutation: ``build()`` materializes the mutated state
     (lazily — proposal must stay cheap, evaluation pays the cost).
 
-    ``cache_key`` optionally fingerprints ``(action, mutation params,
-    inputs the build reads)``: two candidates with equal keys must build
-    states with equal objectives. ``hill_climb`` then skips re-building
-    and re-scoring a key it already measured (identical recompiles were
-    previously re-simulated every round — the candidate cache)."""
+    ``cache_key`` optionally names the mutation itself — ``("reroute",
+    flow, path)``, not a fingerprint of the incumbent being mutated.
+    ``hill_climb`` then skips re-building and re-scoring a key it already
+    measured this climb (identical re-proposed mutations were previously
+    re-simulated every round — the candidate cache)."""
 
     kind: str  # action family, e.g. "reroute" / "move-reducer"
     detail: str  # human-readable description of the mutation
@@ -83,15 +83,19 @@ def hill_climb(
 
     ``cache`` (optional, caller-owned) memoizes candidate objectives by
     ``Candidate.cache_key``: a re-proposed key is recorded as a cache hit
-    and neither rebuilt nor re-scored. Skipping hits is sound because the
-    incumbent objective only ever decreases — a cached score was measured
-    against a worse-or-equal incumbent and not kept as the round winner,
-    so it can never beat the current acceptance bar. That argument binds
-    the cache's lifetime to ONE climb: a hit is never considered for
-    acceptance, so reusing the dict across ``hill_climb`` calls (where a
-    fresh, worse incumbent could legitimately accept a remembered key)
-    would silently discard known improvements. Pass a fresh dict per
-    call, as ``autotune.tune`` does.
+    and neither rebuilt nor re-scored. Keys name the mutation alone, so
+    after an accepted action the same key may denote a build against a
+    *different* incumbent — the cached score is then an estimate, which
+    is why a hit is never considered for acceptance (the ``continue``
+    below runs before the acceptance check): accepts only ever come from
+    fresh evaluations, preserving the never-worse guarantee. The cost is
+    search quality, not correctness — a mutation whose value improved
+    under the new incumbent won't be re-measured this climb — and in
+    exchange re-proposed mutations (the common case: the top-k hot flows
+    are re-ranked every round) stop paying a full simulate each round.
+    The cache's lifetime is ONE climb: pass a fresh dict per call, as
+    ``autotune.tune`` does, since across climbs the estimate would go
+    stale with no bound at all.
     """
     if rounds < 0:
         raise ValueError(f"rounds must be >= 0, got {rounds}")

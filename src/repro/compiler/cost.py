@@ -71,6 +71,35 @@ class CostModel:
     # streaming-simulator granularity: packet trains longer than this are
     # coalesced into integer-weight super-packets (bounds event count)
     sim_train_cap: int = 256
+    # ---- streaming-simulator engine knobs (see compiler.vectorized) ----
+    # which engine simulate_timing uses by default: the batched-step
+    # "vectorized" core, or the per-packet "event" heap (reference)
+    sim_engine: str = "vectorized"
+    # vectorized-engine fidelity: "voq" = per-port virtual output queues
+    # with finite buffers / drops / backpressure (the fast fluid core);
+    # "fifo" = infinite-buffer single-FIFO compatibility mode, bit-exact
+    # with the event engine (tick-calendar scheduling)
+    sim_fidelity: str = "voq"
+    # per-hop link latency in ticks (firesim's LINKLATENCY analogue):
+    # a packet served at hop i is servable at hop i+1 this many ticks
+    # after hop-i service starts
+    sim_link_latency_ticks: int = 1
+    # per-output-port bandwidth cap in packets/tick (the §3 C/e throttle
+    # split per port, firesim's throttle_numer/denom); None = the port
+    # never limits below the switch's 1 pkt/tick aggregate service rate
+    sim_port_bw: float | None = None
+    # finite per-switch transit buffer in packets (firesim's
+    # LIMITED_BUFSIZE); None = infinite (the reference model). When
+    # finite, arrivals beyond capacity follow ``sim_buffer_policy``
+    sim_buffer_packets: float | None = None
+    # "backpressure": a full downstream switch stalls the upstream VOQ
+    # (credit-based; counted in port_blocked_ticks); "drop": overflow
+    # packets vanish (counted in port_drops)
+    sim_buffer_policy: str = "backpressure"
+    # run the vectorized engine's dense per-step kernel under jax.jit
+    # (experimental; numpy baseline is the default — env REPRO_SIM_JAX=1
+    # also enables it)
+    sim_use_jax: bool = False
 
     # ------------------------------------------------------------ traffic --
     @property

@@ -341,12 +341,17 @@ def reroute_feedback_pass(ctx: CompileCtx) -> str:
     recirculation hotspots. This pass runs the streaming simulator on the
     current routes, then re-runs ``build_routes`` with (a) per-edge
     *packet* weights from the cost model's traffic (a hot shuffle bucket
-    claims more of a link than a cold one) and (b) per-switch penalties
-    from the simulator's measured queueing, normalized below packet scale
-    so they steer ties rather than override traffic. It iterates to a
-    routing fixed point or ``options["reroute_rounds"]`` (default 3),
-    keeping the best-makespan table seen — so the emitted plan's streamed
-    makespan never exceeds the static-ECMP plan's.
+    claims more of a link than a cold one), (b) per-switch penalties
+    from the simulator's measured queueing plus per-switch buffer drops,
+    and (c) per-link penalties from the VOQ engine's per-port signals
+    (peak VOQ depth, drops, backpressure-blocked ticks) — contention a
+    switch-level number can't localize: one saturated output port must
+    not repel traffic from the switch's other ports. All penalties are
+    normalized below packet scale so they steer ties rather than
+    override traffic. It iterates to a routing fixed point or
+    ``options["reroute_rounds"]`` (default 3), keeping the best-makespan
+    table seen — so the emitted plan's streamed makespan never exceeds
+    the static-ECMP plan's.
     """
     if ctx.placement is None or ctx.routes is None:
         raise ValueError("reroute-feedback requires routes (run 'route' first)")
@@ -373,10 +378,28 @@ def reroute_feedback_pass(ctx: CompileCtx) -> str:
     cur, cur_rep = ctx.routes, static_rep
     best, best_rep = cur, cur_rep
     for round_no in range(1, max_rounds + 1):
-        scale = max(cur_rep.queued_batches.values(), default=0) + 1.0
-        penalty = {sw: q / scale for sw, q in cur_rep.queued_batches.items()}
+        # per-switch: measured queueing + packets dropped at the switch's
+        # full buffer (the latter is zero under the infinite default)
+        sw_pressure = dict(cur_rep.queued_batches)
+        for sw, d in cur_rep.switch_drops().items():
+            sw_pressure[sw] = sw_pressure.get(sw, 0) + d
+        scale = max(sw_pressure.values(), default=0) + 1.0
+        penalty = {sw: v / scale for sw, v in sw_pressure.items()}
+        # per-link: the VOQ engine's per-port contention (empty when the
+        # report came from the event engine)
+        port_pressure: dict = {}
+        for signal, w in (
+            (cur_rep.voq_depth, 1.0),
+            (cur_rep.port_drops, 1.0),
+            (cur_rep.port_blocked_ticks, 1.0),
+        ):
+            for link, v in signal.items():
+                port_pressure[link] = port_pressure.get(link, 0.0) + w * v
+        link_scale = max(port_pressure.values(), default=0.0) + 1.0
+        link_penalty = {lk: v / link_scale for lk, v in port_pressure.items()}
         nxt = build_routes(
-            p, ctx.topology, ctx.placement, edge_weight=weights, switch_penalty=penalty
+            p, ctx.topology, ctx.placement,
+            edge_weight=weights, switch_penalty=penalty, link_penalty=link_penalty,
         )
         stats["rounds"] = round_no
         if [r.path for r in nxt.routes] == [r.path for r in cur.routes]:

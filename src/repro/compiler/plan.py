@@ -67,24 +67,49 @@ class CompiledPlan:
             item_dtype=item_dtype if item_dtype is not None else jnp.float32,
         )
 
-    def simulate(self, inputs: Mapping[str, np.ndarray]):
-        """Run the streaming packet simulator; returns a ``SimResult``."""
+    def simulate(self, inputs: Mapping[str, np.ndarray], *, engine: str | None = None):
+        """Run the streaming packet simulator; returns a ``SimResult``.
+        ``engine`` selects ``"vectorized"`` (batched-step VOQ core, the
+        default via ``CostModel.sim_engine``) or ``"event"`` (per-packet
+        reference heap)."""
         from repro.compiler.simulator import SimulatorBackend
 
-        return SimulatorBackend(self).run(inputs)
+        return SimulatorBackend(self).run(inputs, engine=engine)
 
-    def simulate_timing(self):
+    def flow_spec(self):
+        """Packet trains + flow graph derived from program/routes/cost
+        model — memoized on the plan. Autotune evaluates the same plan's
+        timing repeatedly (and both engines consume the same spec), so
+        re-deriving trains per call is pure waste. ``dataclasses.replace``
+        (how every autotune action derives a mutated plan) copies fields
+        only, not this cache, so mutated plans rebuild naturally."""
+        if getattr(self, "_flow_spec", None) is None:
+            from repro.compiler.simulator import build_flow_spec
+
+            self._flow_spec = build_flow_spec(self.program, self.routes, self.cost_model)
+        return self._flow_spec
+
+    def simulate_timing(self, *, engine: str | None = None):
         """Timing half of the simulator alone (no input arrays needed);
         returns a ``SimReport``. Streamed makespan depends on traffic
         shapes, not payload values — this is what bucket-count
-        arbitration and the reroute-feedback loop consume. Memoized:
-        program/routes are fixed once emitted, and arbitration + stats +
-        benchmarks would otherwise re-run the same simulation."""
-        if getattr(self, "_timing_report", None) is None:
-            from repro.compiler.simulator import simulate_timing
+        arbitration and the reroute-feedback loop consume. Memoized per
+        engine: program/routes are fixed once emitted, and arbitration +
+        stats + benchmarks would otherwise re-run the same simulation."""
+        from repro.compiler.simulator import ENGINES, simulate_timing
 
-            self._timing_report = simulate_timing(self.program, self.routes, self.cost_model)
-        return self._timing_report
+        eng = engine if engine is not None else getattr(self.cost_model, "sim_engine", "vectorized")
+        if eng not in ENGINES:
+            raise ValueError(f"unknown simulator engine {eng!r}; one of {ENGINES}")
+        reports = getattr(self, "_timing_reports", None)
+        if reports is None:
+            reports = self._timing_reports = {}
+        if eng not in reports:
+            reports[eng] = simulate_timing(
+                self.program, self.routes, self.cost_model,
+                engine=eng, spec=self.flow_spec(),
+            )
+        return reports[eng]
 
     def execute_reference(self, inputs: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
         """Pure-numpy oracle on this plan's (rewritten) program."""

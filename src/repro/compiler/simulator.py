@@ -36,6 +36,18 @@ form — it streams:
   super-packet of weight w behaves exactly like w back-to-back
   packets).
 
+Two engines share this module's traffic model (``FlowSpec``, built once
+per plan and memoized on ``CompiledPlan``):
+
+* ``engine="event"`` — the per-packet event-ordered loop below, the
+  reference implementation;
+* ``engine="vectorized"`` — ``compiler.vectorized``'s batched-step core
+  (dense per-switch × per-port queue arrays, virtual output queues,
+  finite buffers, drop/backpressure counters). This is the default
+  (``CostModel.sim_engine``): its step count scales with contention
+  changes, not packet count, which is what makes autotune's dozens of
+  candidate evaluations affordable.
+
 Functional outputs come from ``codelet.execute_reference`` on the same
 (rewritten) program, so simulator outputs are the values the reference
 oracle produces — functional equivalence and timing come from one run.
@@ -60,6 +72,8 @@ from repro.core.routing import RoutingTable
 
 NodeId = Hashable
 
+ENGINES = ("event", "vectorized")
+
 
 @dataclasses.dataclass(frozen=True)
 class SimReport:
@@ -76,6 +90,22 @@ class SimReport:
     switch_busy_ticks: dict[NodeId, int] = dataclasses.field(default_factory=dict)
     switch_utilization: dict[NodeId, float] = dataclasses.field(default_factory=dict)
     max_queue_depth: dict[NodeId, int] = dataclasses.field(default_factory=dict)
+    # which engine produced this report ("event" or "vectorized")
+    engine: str = "event"
+    # ---- per-port signals (vectorized engine only; empty under "event").
+    # A port is the directed link (switch, next_switch); the loopback
+    # port (sw, sw) is a Reduce's recirculation path.
+    # peak virtual-output-queue depth per port, in packets (pipeline
+    # fill excluded — a saturated but wait-free port reads ~0)
+    voq_depth: dict[tuple[NodeId, NodeId], float] = dataclasses.field(default_factory=dict)
+    # packets dropped at a full downstream buffer (sim_buffer_policy="drop")
+    port_drops: dict[tuple[NodeId, NodeId], float] = dataclasses.field(default_factory=dict)
+    # ticks a VOQ head spent stalled on a full downstream buffer
+    # (sim_buffer_policy="backpressure")
+    port_blocked_ticks: dict[tuple[NodeId, NodeId], float] = dataclasses.field(
+        default_factory=dict
+    )
+    dropped_packets: float = 0.0
 
     @property
     def hot_switch(self) -> NodeId | None:
@@ -84,6 +114,13 @@ class SimReport:
             return None
         return max(self.queued_batches, key=lambda s: (self.queued_batches[s], str(s)))
 
+    def switch_drops(self) -> dict[NodeId, float]:
+        """Packets dropped per upstream switch (aggregated over its ports)."""
+        out: dict[NodeId, float] = {}
+        for (sw, _nxt), n in self.port_drops.items():
+            out[sw] = out.get(sw, 0.0) + n
+        return out
+
 
 @dataclasses.dataclass(frozen=True)
 class SimResult:
@@ -91,16 +128,41 @@ class SimResult:
     report: SimReport
 
 
-@dataclasses.dataclass
-class _Flow:
+# ----------------------------------------------------------- flow spec --
+@dataclasses.dataclass(frozen=True)
+class FlowDef:
     """One routed DAG edge: a packet train travelling ``path``."""
 
     src: str
     dst: str
     path: tuple[NodeId, ...]
-    train: tuple[int, ...]  # super-packet weights, sum == traffic packets
-    remaining: int = 0  # super-packets still crossing the last hop
-    last_arrival: float = 0.0
+    packets: int
+    train: tuple[int, ...]  # super-packet weights, sum == packets
+
+    @property
+    def hops(self) -> int:
+        return len(self.path) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowSpec:
+    """Traffic model shared by both engines, derived once from
+    (program, routes, cost model): per-edge packet trains, the node
+    dependency counts that gate injection, and the Reduce recirculation
+    sites. ``CompiledPlan.flow_spec()`` memoizes it so repeated autotune
+    evaluations of one plan skip the rebuild."""
+
+    flows: tuple[FlowDef, ...]
+    out_flows: dict[str, tuple[int, ...]]  # node label -> flow ids it feeds
+    in_degree: dict[str, int]  # node label -> number of in-flows
+    merges: dict[str, int]  # Reduce label -> k−1 recirculations (>0 only)
+    dst_switch: dict[str, NodeId]  # dst label -> its arrival switch
+    sinks: tuple[str, ...] = ()  # program sinks (``Program.sinks`` is
+    # O(nodes²) — cached here so per-simulation reports don't re-scan)
+
+    @property
+    def total_packets(self) -> int:
+        return sum(f.packets for f in self.flows)
 
 
 def _train(packets: int, cap: int) -> tuple[int, ...]:
@@ -110,27 +172,157 @@ def _train(packets: int, cap: int) -> tuple[int, ...]:
     return (base + 1,) * rem + (base,) * (n - rem)
 
 
-def simulate_timing(program: dag.Program, routes: RoutingTable, cost_model) -> SimReport:
-    """Stream every routed edge's packet train through event-ordered
-    switch queues; returns the timing report."""
-    cm = cost_model
-    traffic = cm.traffic(program)
-    cap = max(1, getattr(cm, "sim_train_cap", 256))
-
-    flows: list[_Flow] = []
-    in_flows: dict[str, list[int]] = {}
+def build_flow_spec(program: dag.Program, routes: RoutingTable, cost_model) -> FlowSpec:
+    """Derive the packet trains and node gating both engines stream."""
+    traffic = cost_model.traffic(program)
+    cap = max(1, getattr(cost_model, "sim_train_cap", 256))
+    flows: list[FlowDef] = []
     out_flows: dict[str, list[int]] = {}
+    in_degree: dict[str, int] = {name: 0 for name in program.nodes}
+    dst_switch: dict[str, NodeId] = {}
     for r in routes.routes:
         pk = traffic[r.src_label].packets if r.src_label in traffic else 1
-        in_flows.setdefault(r.dst_label, []).append(len(flows))
         out_flows.setdefault(r.src_label, []).append(len(flows))
+        in_degree[r.dst_label] = in_degree.get(r.dst_label, 0) + 1
+        dst_switch[r.dst_label] = r.path[-1]
         flows.append(
-            _Flow(src=r.src_label, dst=r.dst_label, path=tuple(r.path), train=_train(pk, cap))
+            FlowDef(
+                src=r.src_label,
+                dst=r.dst_label,
+                path=tuple(r.path),
+                packets=pk,
+                train=_train(pk, cap),
+            )
         )
+    merges = {
+        n.name: len(n.srcs) - 1
+        for n in program
+        if isinstance(n, prim.Reduce) and len(n.srcs) > 1
+    }
+    return FlowSpec(
+        flows=tuple(flows),
+        out_flows={k: tuple(v) for k, v in out_flows.items()},
+        in_degree=in_degree,
+        merges=merges,
+        dst_switch=dst_switch,
+        sinks=tuple(program.sinks()),
+    )
 
-    pending = {name: len(in_flows.get(name, ())) for name in program.nodes}
+
+def simulate_timing(
+    program: dag.Program,
+    routes: RoutingTable,
+    cost_model,
+    *,
+    engine: str | None = None,
+    spec: FlowSpec | None = None,
+) -> SimReport:
+    """Stream every routed edge's packet train through the fabric model;
+    returns the timing report.
+
+    ``engine`` selects the core: ``"vectorized"`` (batched-step VOQ
+    engine, the default via ``CostModel.sim_engine``) or ``"event"``
+    (per-packet event-ordered reference). ``spec`` reuses a prebuilt
+    ``FlowSpec`` (``CompiledPlan.flow_spec()`` memoizes one per plan).
+    """
+    eng = engine if engine is not None else getattr(cost_model, "sim_engine", "vectorized")
+    if eng not in ENGINES:
+        raise ValueError(f"unknown simulator engine {eng!r}; one of {ENGINES}")
+    if spec is None:
+        spec = build_flow_spec(program, routes, cost_model)
+    if eng == "event":
+        return _simulate_event(program, spec, cost_model)
+    from repro.compiler.vectorized import simulate_vectorized
+
+    return simulate_vectorized(program, spec, cost_model)
+
+
+class _HeapScheduler:
+    """Reference (t, seq) event ordering via one global heap."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = 0
+
+    def push(self, t: float, item) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, item))
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def pop(self):
+        t, _, item = heapq.heappop(self._heap)
+        return t, item
+
+
+class _CalendarScheduler:
+    """Tick-bucket calendar with FIFO buckets — the vectorized engine's
+    FIFO compatibility scheduler. Every event lands in its tick's bucket
+    in push order; buckets are drained in tick order. Because pushes are
+    globally sequenced, bucket append order equals the heap's (t, seq)
+    order, so this scheduler is bit-exact with ``_HeapScheduler`` while
+    replacing per-event heap maintenance with O(1) appends (one heap
+    entry per *distinct tick*, not per packet)."""
+
+    def __init__(self):
+        self._buckets: dict[float, list] = {}
+        self._ticks: list[float] = []
+        self._cur: list | None = None
+        self._cur_tick = 0.0
+        self._cur_i = 0
+
+    def push(self, t: float, item) -> None:
+        if self._cur is not None and t == self._cur_tick:
+            self._cur.append(item)  # lands behind the event being served
+            return
+        b = self._buckets.get(t)
+        if b is None:
+            self._buckets[t] = b = []
+            heapq.heappush(self._ticks, t)
+        b.append(item)
+
+    def __bool__(self) -> bool:
+        return bool(self._ticks) or (self._cur is not None and self._cur_i < len(self._cur))
+
+    def pop(self):
+        while self._cur is None or self._cur_i >= len(self._cur):
+            t = heapq.heappop(self._ticks)
+            self._cur = self._buckets.pop(t)
+            self._cur_tick = t
+            self._cur_i = 0
+        item = self._cur[self._cur_i]
+        self._cur_i += 1
+        t = self._cur_tick
+        if self._cur_i >= len(self._cur):
+            # bucket exhausted — a later push at this same tick starts a
+            # fresh bucket (still drained before any strictly later tick)
+            self._cur = None
+        return t, item
+
+
+@dataclasses.dataclass
+class _Flow:
+    """Mutable per-run state over a ``FlowDef``."""
+
+    spec: FlowDef
+    remaining: int = 0  # super-packets still crossing the last hop
+    last_arrival: float = 0.0
+
+
+def _simulate_event(
+    program: dag.Program, spec: FlowSpec, cost_model, *, scheduler: str = "heap"
+) -> SimReport:
+    """The per-packet event-ordered core (see module docstring).
+
+    ``scheduler="calendar"`` swaps the global heap for the tick-bucket
+    calendar — identical event order, hence bit-identical reports; the
+    vectorized engine's ``fidelity="fifo"`` compatibility mode runs this.
+    """
+    cm = cost_model
+    flows = [_Flow(spec=fd) for fd in spec.flows]
+    pending = dict(spec.in_degree)
     arrived: dict[str, float] = {}  # node -> latest in-flow last-packet arrival
-    dst_switch: dict[str, NodeId] = {f.dst: f.path[-1] for f in flows}
     ready: dict[str, float] = {}
 
     next_free: dict[NodeId, float] = {}
@@ -141,15 +333,9 @@ def simulate_timing(program: dag.Program, routes: RoutingTable, cost_model) -> S
     queue_delay = 0.0
     wire_bytes = 0.0
 
-    # heap events: (tick, seq, kind, a, b) with kind "pkt" (a=flow id,
-    # b=(super-packet index, hop index)) or "recirc" (a=node label)
-    heap: list[tuple[float, int, str, object, object]] = []
-    seq = 0
-
-    def push(t: float, kind: str, a, b=None) -> None:
-        nonlocal seq
-        seq += 1
-        heapq.heappush(heap, (t, seq, kind, a, b))
+    # events: ("pkt", flow id, super-packet index, hop index) or
+    # ("recirc", node label)
+    sched = _HeapScheduler() if scheduler == "heap" else _CalendarScheduler()
 
     def serve(sw: NodeId, t: float, width: int) -> float:
         """One service of ``width`` packet-ticks at ``sw``: queue
@@ -167,24 +353,30 @@ def simulate_timing(program: dag.Program, routes: RoutingTable, cost_model) -> S
         return start + width
 
     def node_ready(name: str, t: float) -> None:
+        # fire-once guard: a zero-hop flow completes synchronously inside
+        # inject(), so a colocated consumer can reach pending == 0 while
+        # the seed loop is still walking program.nodes — without the guard
+        # the loop would re-fire it and inject its out-flows twice
+        if name in ready:
+            return
         ready[name] = t
-        for fid in out_flows.get(name, ()):
+        for fid in spec.out_flows.get(name, ()):
             inject(fid, t)
 
     def inject(fid: int, t: float) -> None:
         nonlocal edge_hops
         f = flows[fid]
-        hops = len(f.path) - 1
+        hops = f.spec.hops
         edge_hops += hops
         if hops == 0:
             complete(fid, t)
             return
-        f.remaining = len(f.train)
-        for k in range(len(f.train)):
-            push(t, "pkt", fid, (k, 0))
+        f.remaining = len(f.spec.train)
+        for k in range(len(f.spec.train)):
+            sched.push(t, ("pkt", fid, k, 0))
 
     def complete(fid: int, t: float) -> None:
-        d = flows[fid].dst
+        d = flows[fid].spec.dst
         arrived[d] = max(arrived.get(d, 0.0), t)
         pending[d] -= 1
         if pending[d] == 0:
@@ -192,16 +384,15 @@ def simulate_timing(program: dag.Program, routes: RoutingTable, cost_model) -> S
 
     def finalize(name: str, t: float) -> None:
         nonlocal recirc
-        node = program.nodes[name]
-        merges = len(node.srcs) - 1 if isinstance(node, prim.Reduce) else 0
+        merges = spec.merges.get(name, 0)
         if merges > 0:
             recirc += merges
-            if name in dst_switch:
+            if name in spec.dst_switch:
                 # the stored partial re-enters the destination switch's
-                # pipeline once per extra source: a heap event, so the
+                # pipeline once per extra source: an event, so the
                 # recirculated packets contend in time order with transit
                 # traffic at that switch
-                push(t, "recirc", name)
+                sched.push(t, ("recirc", name))
                 return
             t += merges  # pragma: no cover - reduce with no routed in-edges
         node_ready(name, t)
@@ -212,36 +403,36 @@ def simulate_timing(program: dag.Program, routes: RoutingTable, cost_model) -> S
         if pending[name] == 0:
             node_ready(name, 0.0)
 
-    while heap:
-        t, _, kind, a, b = heapq.heappop(heap)
-        if kind == "recirc":
-            node = program.nodes[a]
-            merges = len(node.srcs) - 1
-            sw = dst_switch[a]
+    while sched:
+        t, ev = sched.pop()
+        if ev[0] == "recirc":
+            name = ev[1]
+            merges = spec.merges[name]
+            sw = spec.dst_switch[name]
             if next_free.get(sw, 0.0) <= t:
                 # serve() counts the recirculated packets as queued only
                 # when the switch is busy; count them here otherwise so
                 # they always appear exactly once
                 queued[sw] = queued.get(sw, 0) + merges
-            node_ready(a, serve(sw, t, merges))
+            node_ready(name, serve(sw, t, merges))
             continue
-        f = flows[a]
-        k, hop = b
-        w = f.train[k]
-        done = serve(f.path[hop], t, w)
+        _, fid, k, hop = ev
+        f = flows[fid]
+        w = f.spec.train[k]
+        done = serve(f.spec.path[hop], t, w)
         packet_hops += w
         wire_bytes += cm.wire_bytes(w)
-        if hop + 2 == len(f.path):  # crossed the last hop: at dst switch
+        if hop + 2 == len(f.spec.path):  # crossed the last hop: at dst switch
             f.last_arrival = max(f.last_arrival, done)
             f.remaining -= 1
             if f.remaining == 0:
-                complete(a, f.last_arrival)
+                complete(fid, f.last_arrival)
         else:
             # a super-packet pipelines internally too: its first
             # constituent packet lands on the next switch one tick after
             # service starts (the w-tick service there keeps causality),
             # so coalescing leaves the h + P − 1 arithmetic unchanged
-            push(done - w + 1, "pkt", a, (k, hop + 1))
+            sched.push(done - w + 1, ("pkt", fid, k, hop + 1))
 
     undelivered = sorted(name for name, n in pending.items() if n > 0)
     if undelivered:
@@ -250,7 +441,7 @@ def simulate_timing(program: dag.Program, routes: RoutingTable, cost_model) -> S
             f"never completed ({', '.join(undelivered[:5])}{'…' if len(undelivered) > 5 else ''}) "
             "— is the routing table missing edges for this program?"
         )
-    sinks = program.sinks()
+    sinks = spec.sinks if spec.sinks else tuple(program.sinks())
     makespan = max((ready.get(s, 0.0) for s in sinks), default=0.0)
     time_s = makespan * cm.tick_s + recirc * cm.recirculation_s
     total = makespan if makespan > 0 else 1.0
@@ -266,6 +457,7 @@ def simulate_timing(program: dag.Program, routes: RoutingTable, cost_model) -> S
         switch_busy_ticks={sw: int(round(v)) for sw, v in busy.items()},
         switch_utilization={sw: v / total for sw, v in busy.items()},
         max_queue_depth={sw: int(round(v)) for sw, v in max_depth.items()},
+        engine="event" if scheduler == "heap" else "vectorized",
     )
 
 
@@ -275,7 +467,7 @@ class SimulatorBackend:
     def __init__(self, plan):
         self.plan = plan
 
-    def run(self, inputs: Mapping[str, np.ndarray]) -> SimResult:
+    def run(self, inputs: Mapping[str, np.ndarray], *, engine: str | None = None) -> SimResult:
         plan = self.plan
         program = plan.program
         for name in program.sources():
@@ -287,4 +479,4 @@ class SimulatorBackend:
         from repro.core.codelet import execute_reference
 
         outputs = execute_reference(program, inputs)
-        return SimResult(outputs=outputs, report=plan.simulate_timing())
+        return SimResult(outputs=outputs, report=plan.simulate_timing(engine=engine))

@@ -101,7 +101,11 @@ class Program:
         return [n.name for n in self.nodes.values() if label in n.deps]
 
     def sinks(self) -> list[str]:
-        return [name for name in self.nodes if not self.consumers(name)]
+        # one pass over all deps instead of consumers() per node (which
+        # would rescan every node per call — quadratic on shuffle-sized
+        # programs, and sinks() sits on the simulators' report path)
+        consumed = {d for n in self.nodes.values() for d in n.deps}
+        return [name for name in self.nodes if name not in consumed]
 
     def sources(self) -> list[str]:
         return [n.name for n in self.nodes.values() if isinstance(n, prim.Store)]
@@ -122,14 +126,25 @@ class Program:
 
     def toposort(self) -> Iterator[prim.Node]:
         """Deterministic topological order (Kahn, insertion-order ties)."""
-        indeg = {name: len(set(n.deps)) for name, n in self.nodes.items()}
+        # reverse index built once: consumers() per emitted node would
+        # rescan all nodes each time, and toposort runs on every program
+        # iteration (cost model, passes, simulators)
+        cons: dict[str, list[str]] = {}
+        indeg: dict[str, int] = {}
+        for name, node in self.nodes.items():
+            uniq = set(node.deps)
+            indeg[name] = len(uniq)
+            for d in uniq:
+                cons.setdefault(d, []).append(name)
+        # insertion-order ties: consumers were appended in node order, and
+        # the ready list is FIFO, matching the original scan order
         ready = [name for name, d in indeg.items() if d == 0]
         emitted = 0
         while ready:
             name = ready.pop(0)
             emitted += 1
             yield self.nodes[name]
-            for c in self.consumers(name):
+            for c in cons.get(name, ()):
                 indeg[c] -= 1
                 if indeg[c] == 0:
                     ready.append(c)

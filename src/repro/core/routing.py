@@ -180,6 +180,7 @@ def _load_aware_shortest_path(
     link_load: dict[tuple[NodeId, NodeId], float],
     switch_penalty: Mapping[NodeId, float] | None = None,
     switch_load: Mapping[NodeId, float] | None = None,
+    link_penalty: Mapping[tuple[NodeId, NodeId], float] | None = None,
 ) -> list[NodeId]:
     """Shortest path that breaks equal-cost ties by current link load.
 
@@ -196,11 +197,16 @@ def _load_aware_shortest_path(
     this round (greedy next-hop choice is otherwise blind to load one
     hop downstream: a heavy train avoids link A→B while walking into the
     same congested B→C that made A→B bad).
+    ``link_penalty`` adds a per-directed-link term — the VOQ engine's
+    measured per-port contention (drops, blocked ticks, depth), which a
+    per-switch penalty can't express: one saturated output port must not
+    repel traffic using the switch's other ports.
     """
     if src == dst:
         return [src]
     penalty = switch_penalty or {}
     transit = switch_load or {}
+    link_pen = link_penalty or {}
     path = [src]
     cur = src
     remaining = dist.get(src)
@@ -212,7 +218,10 @@ def _load_aware_shortest_path(
             if dist.get(v) != remaining - 1:
                 continue
             key = (
-                link_load.get((cur, v), 0.0) + penalty.get(v, 0.0) + transit.get(v, 0.0),
+                link_load.get((cur, v), 0.0)
+                + link_pen.get((cur, v), 0.0)
+                + penalty.get(v, 0.0)
+                + transit.get(v, 0.0),
                 str(v),
             )
             if best is None or key < best[0]:
@@ -232,6 +241,7 @@ def build_routes(
     *,
     edge_weight: Mapping[str, float] | None = None,
     switch_penalty: Mapping[NodeId, float] | None = None,
+    link_penalty: Mapping[tuple[NodeId, NodeId], float] | None = None,
 ) -> RoutingTable:
     """One ``Route`` per DAG edge, spreading equal-cost ties by link load.
 
@@ -242,7 +252,9 @@ def build_routes(
     shuffle bucket claims proportionally more of a link than a cold one.
     ``switch_penalty`` biases tie-breaks away from given switches (the
     simulator's measured queueing, normalized below packet scale so
-    traffic weights dominate and penalties only break ties).
+    traffic weights dominate and penalties only break ties);
+    ``link_penalty`` does the same per directed link (the VOQ engine's
+    per-port drop/backpressure signals).
 
     In feedback mode (either keyword given) routed traffic also
     accumulates per-*switch* transit load consulted by later next-hop
@@ -254,7 +266,11 @@ def build_routes(
     # per-link weights accumulated while routing: later edges avoid links
     # earlier equal-cost edges already claimed (queue-aware ECMP)
     link_load: dict[tuple[NodeId, NodeId], float] = {}
-    feedback_mode = edge_weight is not None or switch_penalty is not None
+    feedback_mode = (
+        edge_weight is not None
+        or switch_penalty is not None
+        or link_penalty is not None
+    )
     switch_load: dict[NodeId, float] = {}
     dist_maps: dict[NodeId, dict[NodeId, int]] = {}  # one BFS per destination
     load_aware = hasattr(topo, "neighbors")
@@ -274,6 +290,7 @@ def build_routes(
                         link_load,
                         switch_penalty,
                         switch_load if feedback_mode else None,
+                        link_penalty,
                     )
                 )
             else:

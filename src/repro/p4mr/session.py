@@ -319,15 +319,18 @@ class Session:
         inputs: Mapping[str, Mapping] | None = None,
         *,
         names: Sequence[str] | None = None,
+        engine: str | None = None,
     ) -> SessionReport:
         """Stream every registered job's packet trains through the shared
         fabric at once (the multi-tenant switch story).
 
         All jobs inject at tick 0; their trains contend in the same
-        event-ordered switch queues, so the ``combined`` makespan is
-        never below any job's ``solo`` makespan — queues only add delay.
-        ``inputs`` optionally maps job name → per-Store input arrays for
-        functional outputs; ``names`` restricts which jobs share the run.
+        switch queues, so the ``combined`` makespan is never below any
+        job's ``solo`` makespan — queues only add delay. ``inputs``
+        optionally maps job name → per-Store input arrays for functional
+        outputs; ``names`` restricts which jobs share the run. ``engine``
+        picks the simulator core ("event" | "vectorized") for both the
+        combined and the solo runs; default is ``CostModel.sim_engine``.
         """
         from repro.compiler.simulator import simulate_timing
 
@@ -343,8 +346,8 @@ class Session:
         if not picked:
             raise ValueError("session has no compiled jobs to simulate")
         program, routes = merge_plans(picked)
-        combined = simulate_timing(program, routes, self.cost_model)
-        solo = {n: pl.simulate_timing() for n, pl in picked.items()}
+        combined = simulate_timing(program, routes, self.cost_model, engine=engine)
+        solo = {n: pl.simulate_timing(engine=engine) for n, pl in picked.items()}
         outputs = None
         if inputs is not None:
             unknown = [n for n in inputs if n not in picked]

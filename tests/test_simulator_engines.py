@@ -1,0 +1,313 @@
+"""Differential and unit tests for the vectorized simulator core.
+
+Three layers:
+
+* **dispatch** — engine selection via ``CostModel.sim_engine`` /
+  ``simulate_timing(engine=...)`` and the per-plan memos;
+* **differential** — the fluid VOQ engine must track the event-ordered
+  reference: makespan within 5%, identical per-switch work, identical
+  functional outputs, on seeded chain / shuffle / multi-job programs
+  (``fidelity="fifo"`` must match the reference bit-exactly);
+* **VOQ semantics** — head-of-line blocking is observable per port,
+  drop counters grow monotonically as buffers shrink, and infinite
+  buffers reproduce the default (no drops, no blocked ticks).
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro import compiler
+from repro.compiler.simulator import ENGINES, _simulate_event, build_flow_spec
+from repro.compiler.vectorized import VoqParams, simulate_vectorized
+from repro.core import dag, topology, wordcount
+
+
+def _fan_topology():
+    """Two source edge switches (SA also owning a sibling output port
+    toward S4) converging on transit switch S1: flows A and B oversubscribe
+    S1 (2 pkt/tick in, 1 out) while flow C rides SA's other port."""
+    adj = {
+        "SA": ("S1", "S4"),
+        "SB": ("S1",),
+        "S1": ("SA", "SB", "S2"),
+        "S2": ("S1",),
+        "S4": ("SA", "S5"),
+        "S5": ("S4",),
+    }
+    hosts = {
+        "ha": "SA", "hc": "SA", "hb": "SB",
+        "hx": "S2", "hy": "S2", "hz": "S5",
+    }
+    return topology.SwitchTopology(adjacency=adj, host_uplink=hosts)
+
+
+def _fan_program(packets: int = 32) -> dag.Program:
+    """A: SA→S1→S2 and B: SB→S1→S2 converge on transit switch S1;
+    C: SA→S4→S5 shares SA with A but uses the sibling output port."""
+    p = dag.Program()
+    p.store("A", host="ha", items=packets)
+    p.store("B", host="hb", items=packets)
+    p.store("C", host="hc", items=packets)
+    p.collect("X", "A", sink_host="hx")
+    p.collect("Y", "B", sink_host="hy")
+    p.collect("Z", "C", sink_host="hz")
+    return p
+
+
+def _random_chain_program(rng: random.Random) -> tuple[dag.Program, dict]:
+    """Seeded random multi-chain program on the 4x4 torus: a few stores
+    with random sizes, map stages, one merging reduce, one collect."""
+    p = dag.Program()
+    k = rng.randint(2, 4)
+    for i in range(k):
+        p.store(f"s{i}", host=f"d{rng.randrange(16)}", items=rng.randint(4, 60))
+    labels = []
+    for i in range(k):
+        p.map(f"m{i}", f"s{i}")
+        labels.append(f"m{i}")
+    p.sum("r", *labels)
+    p.collect("out", "r", sink_host=f"d{rng.randrange(16)}")
+    return p
+
+
+def _compile(program, topo):
+    return compiler.compile(program, topo, passes=compiler.STATIC_ECMP_PASSES)
+
+
+def _both(plan):
+    return (
+        plan.simulate_timing(engine="event"),
+        plan.simulate_timing(engine="vectorized"),
+    )
+
+
+def _assert_close(rep_e, rep_v, tol=0.05):
+    ms_e, ms_v = rep_e.makespan_ticks, rep_v.makespan_ticks
+    assert abs(ms_v - ms_e) <= max(1, tol * ms_e), (ms_e, ms_v)
+    # both engines push exactly the same packets through exactly the same
+    # switches, so per-switch work (busy ticks) must agree, not just the
+    # end-to-end makespan
+    assert set(rep_e.switch_busy_ticks) == set(rep_v.switch_busy_ticks)
+    for sw, busy in rep_e.switch_busy_ticks.items():
+        assert abs(rep_v.switch_busy_ticks[sw] - busy) <= max(1, 0.02 * busy)
+
+
+# ------------------------------------------------------------- dispatch --
+def test_engine_dispatch_and_report_tags():
+    plan = _compile(_fan_program(), _fan_topology())
+    rep_e, rep_v = _both(plan)
+    assert rep_e.engine == "event"
+    assert rep_v.engine == "vectorized"
+    # the cost-model default is the vectorized core
+    assert plan.cost_model.sim_engine == "vectorized"
+    assert plan.simulate_timing().engine == "vectorized"
+    with pytest.raises(ValueError, match="unknown simulator engine"):
+        plan.simulate_timing(engine="quantum")
+    assert set(ENGINES) == {"event", "vectorized"}
+
+
+def test_flow_spec_and_timing_memos_invalidate_on_mutation():
+    plan = _compile(_fan_program(), _fan_topology())
+    spec = plan.flow_spec()
+    assert plan.flow_spec() is spec  # memoized
+    assert plan.simulate_timing() is plan.simulate_timing()  # per-engine memo
+    assert plan.simulate_timing(engine="event") is not plan.simulate_timing()
+    # dataclasses.replace is how every autotune action derives a mutated
+    # plan: it copies declared fields only, so the caches don't leak into
+    # the mutant and a changed cost model is actually honoured
+    chunked = dataclasses.replace(
+        plan, cost_model=dataclasses.replace(plan.cost_model, sim_train_cap=4)
+    )
+    assert chunked.flow_spec() is not spec
+    assert max(len(f.train) for f in chunked.flow_spec().flows) <= 4
+    assert max(len(f.train) for f in spec.flows) > 4
+    mutated_routes = dataclasses.replace(plan, routes=plan.routes)
+    assert mutated_routes.flow_spec() is not spec
+
+
+def test_session_simulate_threads_engine():
+    from repro.p4mr import Session
+
+    sess = Session(topology.paper_topology())
+    sess.compile(dag.paper_example(), name="job")
+    rep_e = sess.simulate(engine="event")
+    rep_v = sess.simulate(engine="vectorized")
+    assert rep_e.combined.engine == "event"
+    assert rep_v.combined.engine == "vectorized"
+    assert rep_v.solo["job"].engine == "vectorized"
+
+
+# ---------------------------------------------------------- differential --
+def test_vectorized_pipelining_matches_h_plus_p_minus_1():
+    """The h + P − 1 streaming identity (event engine's pinned invariant)
+    must survive the fluid approximation exactly on an uncontended path."""
+    topo = _fan_topology()
+    p = dag.Program()
+    p.store("A", host="ha", items=17)
+    p.collect("X", "A", sink_host="hx")
+    plan = _compile(p, topo)
+    rep_e, rep_v = _both(plan)
+    hops = plan.routes.routes[0].hops
+    assert rep_e.makespan_ticks == hops + 17 - 1
+    assert rep_v.makespan_ticks == hops + 17 - 1
+
+
+@pytest.mark.parametrize("seed", [7, 23, 101])
+def test_differential_random_chain_programs(seed):
+    rng = random.Random(seed)
+    topo = topology.TorusTopology(dims=(4, 4))
+    plan = _compile(_random_chain_program(rng), topo)
+    rep_e, rep_v = _both(plan)
+    _assert_close(rep_e, rep_v)
+    assert rep_e.recirculations == rep_v.recirculations
+
+
+@pytest.mark.parametrize("skew", [0.0, 2.0])
+def test_differential_shuffle(skew):
+    hosts = [f"h{i}" for i in range(4)]
+    topo = topology.fat_tree_topology(4)
+    weights = None
+    if skew:
+        raw = [(i + 1) ** skew for i in range(4)]
+        weights = [w / sum(raw) for w in raw]
+    # skewed buckets concentrate load; the fluid engine's relative error
+    # shrinks with packet count, so the skewed cell runs a bigger vocab
+    vocab = 512 if skew else 64
+    prog = wordcount.wordcount_shuffle_program(
+        4, vocab, num_buckets=4, weights=weights, hosts=hosts,
+        sink_host=f"h{len(topo.hosts) - 1}",
+    )
+    plan = _compile(prog, topo)
+    rep_e, rep_v = _both(plan)
+    _assert_close(rep_e, rep_v)
+
+
+def test_differential_multi_job_shared_fabric():
+    """Two independent jobs merged onto one fabric (the p4mr session
+    path) must agree across engines under cross-job contention too."""
+    from repro.p4mr import Session
+
+    sess = Session(topology.TorusTopology(dims=(4, 4)))
+    rng = random.Random(5)
+    sess.compile(_random_chain_program(rng), name="j1", options="static_ecmp")
+    sess.compile(_random_chain_program(rng), name="j2", options="static_ecmp")
+    rep_e = sess.simulate(engine="event").combined
+    rep_v = sess.simulate(engine="vectorized").combined
+    _assert_close(rep_e, rep_v)
+
+
+def test_fifo_fidelity_is_bit_exact_with_event_engine():
+    """fidelity="fifo" runs the same arithmetic on the calendar scheduler
+    — every report field must match the reference heap exactly."""
+    hosts = [f"h{i}" for i in range(4)]
+    topo = topology.fat_tree_topology(4)
+    prog = wordcount.wordcount_shuffle_program(
+        4, 64, num_buckets=4, hosts=hosts, sink_host=f"h{len(topo.hosts) - 1}"
+    )
+    plan = _compile(prog, topo)
+    spec = plan.flow_spec()
+    rep_e = _simulate_event(plan.program, spec, plan.cost_model)
+    rep_f = simulate_vectorized(
+        plan.program, spec, plan.cost_model,
+        params=VoqParams(fidelity="fifo"),
+    )
+    for field in (
+        "makespan_ticks", "queue_delay_ticks", "queued_batches",
+        "switch_busy_ticks", "max_queue_depth", "recirculations",
+        "edge_hops", "packet_hops",
+    ):
+        assert getattr(rep_f, field) == getattr(rep_e, field), field
+
+
+def test_functional_outputs_identical_across_engines():
+    topo = _fan_topology()
+    plan = _compile(_fan_program(4), topo)
+    ins = {k: np.arange(4, dtype=np.float64) + ord(k) for k in "ABC"}
+    out_e = plan.simulate(ins, engine="event")
+    out_v = plan.simulate(ins, engine="vectorized")
+    assert out_e.outputs.keys() == out_v.outputs.keys()
+    for k in out_e.outputs:
+        np.testing.assert_array_equal(out_e.outputs[k], out_v.outputs[k])
+    assert out_v.report.engine == "vectorized"
+
+
+# ---------------------------------------------------------- VOQ semantics --
+def _voq_report(plan, **knobs):
+    cm = dataclasses.replace(plan.cost_model, **knobs)
+    return simulate_vectorized(
+        plan.program, build_flow_spec(plan.program, plan.routes, cm), cm
+    )
+
+
+def test_hol_blocking_is_per_port():
+    """Two flows oversubscribe the S1→S2 port's downstream buffer; the
+    sibling S1→S3 port must keep flowing (that is the point of VOQs) and
+    the backpressure must be attributed to the congested port alone."""
+    plan = _compile(_fan_program(32), _fan_topology())
+    rep = _voq_report(
+        plan, sim_buffer_packets=4, sim_buffer_policy="backpressure"
+    )
+    blocked_ports = set(rep.port_blocked_ticks)
+    assert blocked_ports and all(nxt == "S1" for _sw, nxt in blocked_ports)
+    # SA's sibling port toward S4 never stalls: flow C keeps flowing
+    assert ("SA", "S4") not in blocked_ports
+    assert rep.dropped_packets == 0.0
+    # blocking delays completion relative to infinite buffers
+    assert rep.makespan_ticks >= plan.simulate_timing().makespan_ticks
+
+
+def test_drop_counters_monotone_as_buffers_shrink():
+    plan = _compile(_fan_program(32), _fan_topology())
+    drops = [
+        _voq_report(
+            plan, sim_buffer_packets=b, sim_buffer_policy="drop"
+        ).dropped_packets
+        for b in (64, 8, 2)
+    ]
+    assert drops[0] == 0.0
+    assert drops == sorted(drops)
+    rep = _voq_report(plan, sim_buffer_packets=2, sim_buffer_policy="drop")
+    assert rep.dropped_packets > 0
+    assert sum(rep.port_drops.values()) == pytest.approx(rep.dropped_packets)
+    # per-switch aggregation feeds autotune's hotspot ranking
+    assert sum(rep.switch_drops().values()) == pytest.approx(rep.dropped_packets)
+
+
+def test_infinite_buffers_reproduce_default_fifo_behaviour():
+    plan = _compile(_fan_program(32), _fan_topology())
+    base = plan.simulate_timing()
+    huge = _voq_report(
+        plan, sim_buffer_packets=10_000, sim_buffer_policy="backpressure"
+    )
+    assert huge.makespan_ticks == base.makespan_ticks
+    assert huge.dropped_packets == 0.0
+    assert not huge.port_blocked_ticks
+    assert base.dropped_packets == 0.0 and not base.port_drops
+
+
+def test_voq_depth_signal_present_under_contention():
+    plan = _compile(_fan_program(32), _fan_topology())
+    rep = plan.simulate_timing()
+    # two 32-packet trains converge on the S1→S2 port: its VOQs hold real
+    # backlog, and every reported port is a directed link of some route
+    assert rep.voq_depth
+    links = {
+        (a, b) for r in plan.routes.routes for a, b in zip(r.path, r.path[1:])
+    }
+    loopbacks = {(sw, sw) for sw, _ in links} | {(sw, sw) for _, sw in links}
+    assert set(rep.voq_depth) <= links | loopbacks
+    assert max(rep.voq_depth.values()) > 1.0
+
+
+def test_jax_kernel_matches_numpy_path():
+    jax = pytest.importorskip("jax")  # noqa: F841
+    plan = _compile(_fan_program(16), _fan_topology())
+    spec = plan.flow_spec()
+    rep_np = simulate_vectorized(plan.program, spec, plan.cost_model)
+    rep_jx = simulate_vectorized(
+        plan.program, spec, plan.cost_model, params=VoqParams(use_jax=True)
+    )
+    assert rep_jx.makespan_ticks == rep_np.makespan_ticks
+    assert rep_jx.switch_busy_ticks == rep_np.switch_busy_ticks
