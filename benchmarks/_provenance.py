@@ -1,0 +1,74 @@
+"""Run provenance for the BENCH_*.json artifacts.
+
+Every bench writer stamps its artifact with one leading
+``{"provenance": {...}}`` record — when/where the numbers came from
+(timestamp, host, python/numpy/jax versions, git sha) — so a perf
+trajectory read months later is interpretable: "the makespan moved here"
+can be told apart from "the runner changed here".
+
+``check_regression.py`` (and every other artifact consumer) strips the
+block with ``strip_provenance`` before comparing records; provenance is
+metadata about a run, never a gated metric.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import platform
+import socket
+import subprocess
+import sys
+
+
+def provenance() -> dict:
+    """Environment fingerprint of this bench run (all fields best-effort:
+    a missing git binary or an un-importable jax must never fail a bench)."""
+    info: dict = {
+        "timestamp_utc": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "host": socket.gethostname(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        import numpy
+
+        info["numpy"] = numpy.__version__
+    except Exception:
+        pass
+    try:
+        import jax
+
+        info["jax"] = jax.__version__
+    except Exception:
+        pass
+    try:
+        info["git_sha"] = (
+            subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, timeout=5, check=True,
+            ).stdout.strip()
+        )
+    except Exception:
+        pass
+    return info
+
+
+def write_bench(path: str, records: list) -> None:
+    """Write a BENCH json: one provenance record, then the data records."""
+    with open(path, "w") as f:
+        json.dump([{"provenance": provenance()}, *records], f, indent=2)
+
+
+def strip_provenance(records: list) -> tuple[dict | None, list]:
+    """Split a loaded BENCH json into (provenance | None, data records).
+    Tolerates artifacts written before provenance existed (no block) and
+    a block at any position (hand-edited files)."""
+    prov = None
+    data = []
+    for rec in records:
+        if isinstance(rec, dict) and set(rec) == {"provenance"}:
+            prov = rec["provenance"]
+        else:
+            data.append(rec)
+    return prov, data

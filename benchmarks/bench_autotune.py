@@ -31,6 +31,7 @@ import numpy as np
 # bench_shuffle's: the static/feedback columns of the two BENCH jsons must
 # stay comparable cell for cell
 from benchmarks.bench_shuffle import N_MAPPERS, VOCAB, _topologies, _weights, case_inputs
+from benchmarks._provenance import strip_provenance, write_bench
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_autotune.json")
@@ -107,8 +108,7 @@ def _case(topo_name: str, num_buckets: int, skew: float) -> dict:
 
 def run() -> list[tuple[str, float, str]]:
     records = [_case(*case) for case in CASES]
-    with open(OUT_PATH, "w") as f:
-        json.dump(records, f, indent=2)
+    write_bench(OUT_PATH, records)
 
     rows = []
     for r in records:
@@ -129,7 +129,7 @@ def run() -> list[tuple[str, float, str]]:
 def print_summary(path: str = OUT_PATH) -> None:
     """Accepted-action summary of a BENCH_autotune.json (CI job log)."""
     with open(path) as f:
-        records = json.load(f)
+        _, records = strip_provenance(json.load(f))
     for r in records:
         print(f"{r['name']}: feedback={r['makespan_ticks_feedback']}t "
               f"tuned={r['makespan_ticks']}t ({r['improvement_pct_vs_feedback']:+.1f}%)")

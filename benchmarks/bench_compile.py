@@ -7,17 +7,20 @@ prices two tenants sharing one fat-tree (``Session.simulate`` streams
 both jobs' packet trains through the shared switch queues).
 
     PYTHONPATH=src:. python benchmarks/run.py compile
+    PYTHONPATH=src:. python benchmarks/bench_compile.py --timings
 """
 from __future__ import annotations
 
-import json
 import os
+import sys
 import time
 
 import numpy as np
 
 from repro import p4mr
 from repro.core import dsl, topology, wordcount
+
+from benchmarks._provenance import write_bench
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_compile.json")
@@ -128,8 +131,7 @@ def run() -> list[tuple[str, float, str]]:
 
     records.append(_multi_job_case())
 
-    with open(OUT_PATH, "w") as f:
-        json.dump(records, f, indent=2)
+    write_bench(OUT_PATH, records)
 
     rows = []
     for r in records:
@@ -150,3 +152,33 @@ def run() -> list[tuple[str, float, str]]:
         ))
     rows.append(("compile.artifact", 0.0, f"wrote {os.path.basename(OUT_PATH)}"))
     return rows
+
+
+def print_timings() -> None:
+    """Per-pass compile-time breakdown of each benchmark cell — the
+    ``PassRecord`` wall times every compile already collects
+    (``plan.pass_records``), printed instead of discarded."""
+    cases = [
+        ("paper_5_2",
+         dsl.PAPER_SOURCE + 'OUT := COLLECT(E, "h6");\n', topology.paper_topology()),
+    ] + [
+        (f"wordcount_n{n}", wordcount.wordcount_program(n, 64),
+         topology.TorusTopology(dims=(n,)))
+        for n in (4, 8, 16)
+    ]
+    for name, src, topo in cases:
+        plan = p4mr.Session(topo).compile(src, name=name)
+        timings = plan.pass_timings_us()
+        total = sum(timings.values()) or 1.0
+        print(f"{name}: {total:.0f}us over {len(plan.pass_records)} pass(es)")
+        for pname, us in sorted(timings.items(), key=lambda kv: -kv[1]):
+            bar = "#" * max(1, round(30 * us / total))
+            print(f"  {pname:<22} {us:>10.1f}us {100 * us / total:5.1f}% {bar}")
+
+
+if __name__ == "__main__":
+    if "--timings" in sys.argv:
+        print_timings()
+    else:
+        for row, us, derived in run():
+            print(f"{row},{us:.2f},{derived}")

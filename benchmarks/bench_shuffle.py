@@ -18,7 +18,6 @@ simulated metric regresses >10% against the committed baseline
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -26,6 +25,8 @@ import numpy as np
 
 from repro import compiler, shuffle
 from repro.core import topology, wordcount
+
+from benchmarks._provenance import write_bench
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_shuffle.json")
@@ -104,8 +105,7 @@ def run() -> list[tuple[str, float, str]]:
             for skew in SKEWS:
                 records.append(_case(topo_name, topo, hosts, sink, b, skew))
 
-    with open(OUT_PATH, "w") as f:
-        json.dump(records, f, indent=2)
+    write_bench(OUT_PATH, records)
 
     rows = []
     for r in records:

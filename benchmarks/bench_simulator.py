@@ -23,13 +23,14 @@ cross-engine makespan agreement via ``makespan_pct_diff``.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import time
 
 from repro import compiler
 from repro.compiler.simulator import build_flow_spec, simulate_timing
 from repro.core import topology, wordcount
+
+from benchmarks._provenance import write_bench
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_simulator.json")
@@ -110,8 +111,7 @@ def run() -> list[tuple[str, float, str]]:
     for cell in CELLS:
         records.extend(_case(*cell))
 
-    with open(OUT_PATH, "w") as f:
-        json.dump(records, f, indent=2)
+    write_bench(OUT_PATH, records)
 
     rows = []
     for r in records:

@@ -23,6 +23,11 @@ import argparse
 import json
 import sys
 
+try:
+    from benchmarks._provenance import strip_provenance
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from _provenance import strip_provenance
+
 # lower-is-better simulated metrics the gate compares (exact-name match)
 GATED_METRICS = (
     "sim_time_us",
@@ -53,16 +58,22 @@ def record_key(rec: dict) -> tuple:
     return tuple((k, rec[k]) for k in IDENTITY if k in rec)
 
 
+def cell_label(key: tuple) -> str:
+    """Human-readable cell identity (``name=... num_buckets=...``) for
+    failure messages — names the exact record the regression is in."""
+    return " ".join(f"{k}={v}" for k, v in key) or "<record>"
+
+
 def check(baseline: list[dict], current: list[dict], tolerance: float) -> list[str]:
     cur_by_key = {record_key(r): r for r in current}
     errors: list[str] = []
     compared = 0
     for base in baseline:
         key = record_key(base)
-        label = ".".join(str(v) for _, v in key) or "<record>"
+        label = cell_label(key)
         cur = cur_by_key.get(key)
         if cur is None:
-            errors.append(f"{label}: baseline record missing from current run")
+            errors.append(f"cell [{label}]: baseline record missing from current run")
             continue
         for metric in GATED_METRICS:
             if metric not in base or metric not in cur:
@@ -71,7 +82,7 @@ def check(baseline: list[dict], current: list[dict], tolerance: float) -> list[s
             compared += 1
             if c > b * (1.0 + tolerance) + ABS_EPSILON:
                 errors.append(
-                    f"{label}: {metric} regressed {b:g} -> {c:g} "
+                    f"cell [{label}] metric {metric}: regressed {b:g} -> {c:g} "
                     f"(+{100.0 * (c - b) / max(b, 1e-12):.1f}%, tolerance "
                     f"{100.0 * tolerance:.0f}%)"
                 )
@@ -82,7 +93,7 @@ def check(baseline: list[dict], current: list[dict], tolerance: float) -> list[s
             compared += 1
             if c < b * (1.0 - tolerance):
                 errors.append(
-                    f"{label}: {metric} regressed {b:g} -> {c:g} "
+                    f"cell [{label}] metric {metric}: regressed {b:g} -> {c:g} "
                     f"({100.0 * (c - b) / max(b, 1e-12):.1f}%, tolerance "
                     f"-{100.0 * tolerance:.0f}%)"
                 )
@@ -98,10 +109,12 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed relative regression (default 0.10 = 10%%)")
     args = ap.parse_args(argv)
+    # provenance records (who/when/where the numbers were generated) are
+    # metadata, never gated — strip them before comparing
     with open(args.baseline) as f:
-        baseline = json.load(f)
+        _, baseline = strip_provenance(json.load(f))
     with open(args.current) as f:
-        current = json.load(f)
+        _, current = strip_provenance(json.load(f))
     errors = check(baseline, current, args.tolerance)
     new = len(current) - sum(
         1 for r in current if record_key(r) in {record_key(b) for b in baseline}

@@ -1,0 +1,98 @@
+"""CI trace smoke: one compile + tune + simulate run with telemetry on,
+exported as a Chrome trace and validated structurally.
+
+Runs a skewed word-count shuffle through ``Session`` with a ``Telemetry``
+attached and ``CostModel.sim_telemetry`` enabled, then asserts the
+exported trace is Perfetto-loadable: valid JSON, monotonic timestamps
+per track, matched span nesting (``repro.telemetry.validate_chrome_trace``)
+— and that the spans the acceptance criteria name are actually present
+(every pass, every autotune round, the simulate call). Writes
+``trace.json`` + ``metrics.json`` (CI uploads both as artifacts) and
+prints the metrics dashboard. Exit 1 on any failure.
+
+    PYTHONPATH=src:. python benchmarks/trace_smoke.py [outdir]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    outdir = argv[0] if argv else "."
+
+    from repro import p4mr
+    from repro.compiler.cost import CostModel
+    from repro.core import topology, wordcount
+    from repro.telemetry import report as tel_report, validate_chrome_trace
+
+    cm = CostModel(sim_telemetry=True, sim_telemetry_interval=8.0)
+    sess = p4mr.Session(
+        topology.fat_tree_topology(4),
+        cost_model=cm,
+        telemetry=True,
+        options=p4mr.CompileOptions(preset="autotuned", autotune_rounds=2),
+    )
+    prog = wordcount.wordcount_shuffle_program(
+        4, 64, num_buckets=4,
+        weights=(4.0, 1.0, 1.0, 1.0),
+        hosts=[f"h{i}" for i in range(4)], sink_host="h15",
+    )
+    plan = sess.compile(prog, name="smoke")
+    rep = sess.simulate()
+
+    failures: list[str] = []
+
+    # fabric telemetry rode along on the report
+    tl = rep.combined.timeline
+    if tl is None:
+        failures.append("SimReport.timeline is None with sim_telemetry=True")
+    elif not tl.hop_records:
+        failures.append("timeline carries no hop records")
+
+    # the trace round-trips through JSON and validates structurally
+    trace_path = os.path.join(outdir, "trace.json")
+    metrics_path = os.path.join(outdir, "metrics.json")
+    sess.telemetry.write_trace(trace_path)
+    sess.telemetry.write_metrics(metrics_path)
+    with open(trace_path) as f:
+        trace = json.load(f)
+    failures += validate_chrome_trace(trace)
+
+    names = [e["name"] for e in trace["traceEvents"]]
+    for want, why in (
+        ("pass:", "compiler pass spans"),
+        ("tune:round-", "autotune round spans"),
+        ("eval:", "autotune candidate spans"),
+        ("session.compile", "session compile span"),
+        ("session.simulate", "session simulate span"),
+        ("plan.simulate_timing", "simulation spans"),
+    ):
+        if not any(n.startswith(want) for n in names):
+            failures.append(f"no {why} ({want}*) in the trace")
+    ran = {r.name for r in plan.pass_records}
+    spanned = {n[len("pass:"):] for n in names if n.startswith("pass:")}
+    if not ran <= spanned:
+        failures.append(f"passes without spans: {sorted(ran - spanned)}")
+
+    with open(metrics_path) as f:
+        metrics = json.load(f)
+    for counter in ("session.compiles", "session.simulations", "tune.rounds"):
+        if not metrics.get("counters", {}).get(counter):
+            failures.append(f"metric counter {counter!r} missing or zero")
+
+    print(tel_report.render(metrics))
+    print(f"\ntrace: {len(names)} events -> {trace_path}")
+    if failures:
+        print(f"FAIL: {len(failures)} problem(s):")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("OK: trace validates (monotonic ts, matched nesting, all spans present)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -94,19 +94,20 @@ def reroute_candidates(
     ``max_flows`` every k-shortest-paths alternative (including strictly
     longer ones) becomes a candidate replacing just that flow's path.
     """
+    from repro.telemetry.fabric import link_pressure, switch_pressure
+
     rep = plan.simulate_timing()
-    queued = rep.queued_batches
-    drops = rep.switch_drops()
-    voq = rep.voq_depth
-    if not queued and not drops:
+    sw_pressure = switch_pressure(rep)
+    lk_pressure = link_pressure(rep)
+    if not sw_pressure:
         return []
     traffic = plan.cost_model.traffic(plan.program)
     scored = []
     for idx, r in enumerate(plan.routes.routes):
         if r.hops == 0:
             continue
-        exposure = sum(queued.get(sw, 0) + drops.get(sw, 0.0) for sw in r.path)
-        exposure += sum(voq.get(link, 0.0) for link in zip(r.path, r.path[1:]))
+        exposure = sum(sw_pressure.get(sw, 0.0) for sw in r.path)
+        exposure += sum(lk_pressure.get(link, 0.0) for link in zip(r.path, r.path[1:]))
         if exposure <= 0:
             continue
         pk = traffic[r.src_label].packets if r.src_label in traffic else 1
@@ -175,29 +176,33 @@ def move_reducer_candidates(
     reroute-feedback, so routes follow the reducer; a move that overflows
     the target switch's memory budget is skipped, not fatal.
     """
+    from repro.telemetry.fabric import rank_cold, rank_hot, switch_pressure
+
     reducers = _pinned_reducers(plan)
     if not reducers:
         return []
     rep = plan.simulate_timing()
     queued, depth = rep.queued_batches, rep.max_queue_depth
-    drops = rep.switch_drops()
+    pressure = switch_pressure(rep)
 
-    def pressure(sw) -> float:
-        return queued.get(sw, 0) + drops.get(sw, 0.0)
-
-    def heat(label: str) -> tuple:
-        sw = plan.placement.switch_of(label)
-        return (-pressure(sw), -depth.get(sw, 0), label)
-
-    hot = sorted(reducers, key=heat)[:max_reducers]
+    # rank the reducer labels by their host switch's unified pressure
+    # (queued + dropped packets), breaking ties by max backlog then label
+    label_pressure = {
+        lbl: pressure.get(plan.placement.switch_of(lbl), 0.0) for lbl in reducers
+    }
+    label_depth = {
+        lbl: depth.get(plan.placement.switch_of(lbl), 0) for lbl in reducers
+    }
+    hot = rank_hot(label_pressure, secondary=label_depth)[:max_reducers]
     out: list[Candidate] = []
     for label in hot:
         cur = plan.placement.switch_of(label)
-        if pressure(cur) <= 0:
+        if pressure.get(cur, 0.0) <= 0:
             continue  # nothing measured against this switch: leave it
-        targets = sorted(
+        targets = rank_cold(
+            pressure,
             (sw for sw in plan.topology.switches if sw != cur),
-            key=lambda sw: (pressure(sw), depth.get(sw, 0), str(sw)),
+            secondary=depth,
         )[:max_switches]
         for sw in targets:
 

@@ -99,46 +99,68 @@ def hill_climb(
     """
     if rounds < 0:
         raise ValueError(f"rounds must be >= 0, got {rounds}")
+    from repro.telemetry.trace import current_tracer, maybe_span
+
+    tracer = current_tracer()  # spans when a telemetry Tracer is active
     best = state
     best_score = float(objective(state))
     records: list[EvalRecord] = []
     for rnd in range(1, rounds + 1):
-        candidates = list(propose(best, rnd))
-        if not candidates:
-            break
-        bar = best_score - abs(best_score) * min_gain
-        round_best: tuple[float, EvalRecord, Any] | None = None
-        for cand in candidates:
-            rec = EvalRecord(
-                round=rnd,
-                kind=cand.kind,
-                detail=cand.detail,
-                score_before=best_score,
-                score=None,
-                cache_key=cand.cache_key,
-            )
-            records.append(rec)
-            if cache is not None and cand.cache_key is not None and cand.cache_key in cache:
-                rec.score = cache[cand.cache_key]
-                rec.cached = True
-                rec.note = "cache hit"
-                continue
-            try:
-                nxt = cand.build()
-            except SkipCandidate as e:
-                rec.note = str(e) or "infeasible"
-                continue
-            rec.score = float(objective(nxt))
-            if cache is not None and cand.cache_key is not None:
-                cache[cand.cache_key] = rec.score
-            if on_eval is not None:
-                on_eval(rec, nxt)
-            if rec.score < bar and (round_best is None or rec.score < round_best[0]):
-                round_best = (rec.score, rec, nxt)
-        if round_best is None:
-            if stop_when_stuck:
+        with maybe_span(tracer, f"tune:round-{rnd}") as round_attrs:
+            candidates = list(propose(best, rnd))
+            round_attrs["candidates"] = len(candidates)
+            if not candidates:
                 break
-            continue
-        best_score, rec, best = round_best
-        rec.accepted = True
+            bar = best_score - abs(best_score) * min_gain
+            round_best: tuple[float, EvalRecord, Any] | None = None
+            for cand in candidates:
+                rec = EvalRecord(
+                    round=rnd,
+                    kind=cand.kind,
+                    detail=cand.detail,
+                    score_before=best_score,
+                    score=None,
+                    cache_key=cand.cache_key,
+                )
+                records.append(rec)
+                with maybe_span(
+                    tracer, f"eval:{cand.kind}", detail=cand.detail
+                ) as eval_attrs:
+                    if (
+                        cache is not None
+                        and cand.cache_key is not None
+                        and cand.cache_key in cache
+                    ):
+                        rec.score = cache[cand.cache_key]
+                        rec.cached = True
+                        rec.note = "cache hit"
+                        eval_attrs["cached"] = True
+                        eval_attrs["score"] = rec.score
+                        continue
+                    eval_attrs["cached"] = False
+                    try:
+                        nxt = cand.build()
+                    except SkipCandidate as e:
+                        rec.note = str(e) or "infeasible"
+                        eval_attrs["skipped"] = rec.note
+                        continue
+                    rec.score = float(objective(nxt))
+                    eval_attrs["score"] = rec.score
+                    if cache is not None and cand.cache_key is not None:
+                        cache[cand.cache_key] = rec.score
+                    if on_eval is not None:
+                        on_eval(rec, nxt)
+                    if rec.score < bar and (
+                        round_best is None or rec.score < round_best[0]
+                    ):
+                        round_best = (rec.score, rec, nxt)
+            if round_best is None:
+                round_attrs["accepted"] = None
+                if stop_when_stuck:
+                    break
+                continue
+            best_score, rec, best = round_best
+            rec.accepted = True
+            round_attrs["accepted"] = rec.detail
+            round_attrs["score"] = best_score
     return best, best_score, records

@@ -100,6 +100,13 @@ class CostModel:
     # (experimental; numpy baseline is the default — env REPRO_SIM_JAX=1
     # also enables it)
     sim_use_jax: bool = False
+    # ---- INT-style fabric telemetry (repro.telemetry.fabric) -----------
+    # collect per-flow per-hop records (hop latency, queue depth at
+    # dequeue, egress utilization) plus tick-sampled per-port series on
+    # SimReport.timeline. Off by default: the fast path must pay nothing
+    sim_telemetry: bool = False
+    # sample the fabric series every this many ticks
+    sim_telemetry_interval: float = 16.0
 
     # ------------------------------------------------------------ traffic --
     @property

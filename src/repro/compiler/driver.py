@@ -150,13 +150,22 @@ class PassManager:
         return [getattr(p, "pass_name", p.__name__) for p in self.pipeline]
 
     def run(self, ctx: CompileCtx) -> CompileCtx:
+        # one ambient-tracer read per compile: when a telemetry Tracer is
+        # active (Session / activate()), every pass gets a span carrying
+        # the same wall time the PassRecord records; when none is, the
+        # only cost is this lookup
+        from repro.telemetry.trace import current_tracer, maybe_span
+
+        tracer = current_tracer()
         for p in self.pipeline:
             name = getattr(p, "pass_name", p.__name__)
-            t0 = time.perf_counter()
-            summary = p(ctx) or ""
-            ctx.trace.append(
-                PassRecord(name=name, wall_us=(time.perf_counter() - t0) * 1e6, summary=summary)
-            )
+            with maybe_span(tracer, f"pass:{name}") as span_attrs:
+                t0 = time.perf_counter()
+                summary = p(ctx) or ""
+                wall_us = (time.perf_counter() - t0) * 1e6
+                span_attrs["summary"] = summary
+                span_attrs["wall_us"] = round(wall_us, 1)
+            ctx.trace.append(PassRecord(name=name, wall_us=wall_us, summary=summary))
         return ctx
 
 

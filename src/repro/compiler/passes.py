@@ -377,26 +377,17 @@ def reroute_feedback_pass(ctx: CompileCtx) -> str:
     weights = {lbl: float(t.packets) for lbl, t in traffic.items()}
     cur, cur_rep = ctx.routes, static_rep
     best, best_rep = cur, cur_rep
+    from repro.telemetry.fabric import link_pressure, normalized, switch_pressure
+
     for round_no in range(1, max_rounds + 1):
         # per-switch: measured queueing + packets dropped at the switch's
-        # full buffer (the latter is zero under the infinite default)
-        sw_pressure = dict(cur_rep.queued_batches)
-        for sw, d in cur_rep.switch_drops().items():
-            sw_pressure[sw] = sw_pressure.get(sw, 0) + d
-        scale = max(sw_pressure.values(), default=0) + 1.0
-        penalty = {sw: v / scale for sw, v in sw_pressure.items()}
+        # full buffer (the latter is zero under the infinite default);
         # per-link: the VOQ engine's per-port contention (empty when the
-        # report came from the event engine)
-        port_pressure: dict = {}
-        for signal, w in (
-            (cur_rep.voq_depth, 1.0),
-            (cur_rep.port_drops, 1.0),
-            (cur_rep.port_blocked_ticks, 1.0),
-        ):
-            for link, v in signal.items():
-                port_pressure[link] = port_pressure.get(link, 0.0) + w * v
-        link_scale = max(port_pressure.values(), default=0.0) + 1.0
-        link_penalty = {lk: v / link_scale for lk, v in port_pressure.items()}
+        # report came from the event engine). Both read the unified
+        # telemetry pressure surface and are normalized below packet
+        # scale so they steer ties rather than override traffic.
+        penalty = normalized(switch_pressure(cur_rep))
+        link_penalty = normalized(link_pressure(cur_rep))
         nxt = build_routes(
             p, ctx.topology, ctx.placement,
             edge_weight=weights, switch_penalty=penalty, link_penalty=link_penalty,

@@ -51,6 +51,20 @@ class CompiledPlan:
     # TuningReport when repro.autotune produced this plan; None otherwise
     tuning: Any = None
 
+    @property
+    def pass_records(self) -> tuple:
+        """Per-pass wall times + summaries from the driver (the
+        ``PassRecord`` tuple) — the compile-time breakdown
+        ``bench_compile.py --timings`` and the telemetry registry print."""
+        return self.trace
+
+    def pass_timings_us(self) -> dict[str, float]:
+        """Pass name → total wall µs (a pass may run more than once)."""
+        out: dict[str, float] = {}
+        for rec in self.trace:
+            out[rec.name] = out.get(rec.name, 0.0) + rec.wall_us
+        return out
+
     # ------------------------------------------------------------ backends --
     def jax_step(self, *, axis_name: str = "all", item_dtype=None):
         """SPMD step function (shard_map over a 1-D ``axis_name`` device
@@ -105,10 +119,18 @@ class CompiledPlan:
         if reports is None:
             reports = self._timing_reports = {}
         if eng not in reports:
-            reports[eng] = simulate_timing(
-                self.program, self.routes, self.cost_model,
-                engine=eng, spec=self.flow_spec(),
-            )
+            from repro.telemetry.trace import current_tracer, maybe_span
+
+            # span only the real simulation — memo hits are free and
+            # would drown the trace in zero-width spans
+            with maybe_span(
+                current_tracer(), "plan.simulate_timing", engine=eng
+            ) as attrs:
+                reports[eng] = simulate_timing(
+                    self.program, self.routes, self.cost_model,
+                    engine=eng, spec=self.flow_spec(),
+                )
+                attrs["makespan_ticks"] = reports[eng].makespan_ticks
         return reports[eng]
 
     def execute_reference(self, inputs: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
@@ -139,15 +161,20 @@ class CompiledPlan:
           device_count=N`` before importing jax);
         * ``"reference"`` — the pure-numpy oracle.
         """
-        if backend == "reference":
-            return self.execute_reference(inputs)
-        if backend == "simulate":
-            return self.simulate(inputs).outputs
-        if backend != "jax":
-            raise ValueError(
-                f"unknown backend {backend!r}; one of 'simulate', 'jax', 'reference'"
-            )
+        from repro.telemetry.trace import current_tracer, maybe_span
 
+        with maybe_span(current_tracer(), "plan.run", backend=backend):
+            if backend == "reference":
+                return self.execute_reference(inputs)
+            if backend == "simulate":
+                return self.simulate(inputs).outputs
+            if backend != "jax":
+                raise ValueError(
+                    f"unknown backend {backend!r}; one of 'simulate', 'jax', 'reference'"
+                )
+            return self._run_jax(inputs, axis_name=axis_name, item_dtype=item_dtype)
+
+    def _run_jax(self, inputs, *, axis_name: str, item_dtype):
         import repro._jax_compat  # noqa: F401  (shims before any jax use)
         import jax
         import jax.numpy as jnp

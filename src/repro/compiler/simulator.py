@@ -63,7 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Hashable, Mapping
+from typing import Any, Hashable, Mapping
 
 import numpy as np
 
@@ -106,13 +106,19 @@ class SimReport:
         default_factory=dict
     )
     dropped_packets: float = 0.0
+    # INT-style fabric telemetry (repro.telemetry.fabric.Timeline) when
+    # CostModel.sim_telemetry was set; None on the default fast path
+    timeline: Any = None
 
     @property
     def hot_switch(self) -> NodeId | None:
-        """Switch with the most queued packets (None when nothing queued)."""
-        if not self.queued_batches:
-            return None
-        return max(self.queued_batches, key=lambda s: (self.queued_batches[s], str(s)))
+        """Switch with the most measured pressure (None when idle) —
+        queued + dropped packets, tie-broken by the one shared helper
+        (``repro.telemetry.fabric.hottest``) every telemetry-driven
+        selector uses, so the pick is deterministic across engines."""
+        from repro.telemetry.fabric import hottest, switch_pressure
+
+        return hottest(switch_pressure(self))
 
     def switch_drops(self) -> dict[NodeId, float]:
         """Packets dropped per upstream switch (aggregated over its ports)."""
@@ -320,6 +326,12 @@ def _simulate_event(
     vectorized engine's ``fidelity="fifo"`` compatibility mode runs this.
     """
     cm = cost_model
+    engine_label = "event" if scheduler == "heap" else "vectorized"
+    tel = None
+    if getattr(cm, "sim_telemetry", False):
+        from repro.telemetry.fabric import EventCollector
+
+        tel = EventCollector(getattr(cm, "sim_telemetry_interval", 16.0))
     flows = [_Flow(spec=fd) for fd in spec.flows]
     pending = dict(spec.in_degree)
     arrived: dict[str, float] = {}  # node -> latest in-flow last-packet arrival
@@ -405,6 +417,8 @@ def _simulate_event(
 
     while sched:
         t, ev = sched.pop()
+        if tel is not None:
+            tel.advance(t, next_free)
         if ev[0] == "recirc":
             name = ev[1]
             merges = spec.merges[name]
@@ -414,12 +428,24 @@ def _simulate_event(
                 # when the switch is busy; count them here otherwise so
                 # they always appear exactly once
                 queued[sw] = queued.get(sw, 0) + merges
-            node_ready(name, serve(sw, t, merges))
+            depth = max(0.0, next_free.get(sw, 0.0) - t)
+            done = serve(sw, t, merges)
+            if tel is not None:
+                # recirculation is INT traffic too: the loopback port
+                tel.on_service(("recirc", name), name, name, 0, sw,
+                               (sw, sw), merges, t, done, depth)
+            node_ready(name, done)
             continue
         _, fid, k, hop = ev
         f = flows[fid]
         w = f.spec.train[k]
-        done = serve(f.spec.path[hop], t, w)
+        sw = f.spec.path[hop]
+        if tel is not None:
+            depth = max(0.0, next_free.get(sw, 0.0) - t)
+        done = serve(sw, t, w)
+        if tel is not None:
+            tel.on_service((fid, hop), f.spec.src, f.spec.dst, hop, sw,
+                           (sw, f.spec.path[hop + 1]), w, t, done, depth)
         packet_hops += w
         wire_bytes += cm.wire_bytes(w)
         if hop + 2 == len(f.spec.path):  # crossed the last hop: at dst switch
@@ -443,6 +469,10 @@ def _simulate_event(
         )
     sinks = spec.sinks if spec.sinks else tuple(program.sinks())
     makespan = max((ready.get(s, 0.0) for s in sinks), default=0.0)
+    timeline = None
+    if tel is not None:
+        tel.advance(makespan, next_free)  # trailing samples after the last event
+        timeline = tel.finish(makespan, engine_label)
     time_s = makespan * cm.tick_s + recirc * cm.recirculation_s
     total = makespan if makespan > 0 else 1.0
     return SimReport(
@@ -457,7 +487,8 @@ def _simulate_event(
         switch_busy_ticks={sw: int(round(v)) for sw, v in busy.items()},
         switch_utilization={sw: v / total for sw, v in busy.items()},
         max_queue_depth={sw: int(round(v)) for sw, v in max_depth.items()},
-        engine="event" if scheduler == "heap" else "vectorized",
+        engine=engine_label,
+        timeline=timeline,
     )
 
 

@@ -189,6 +189,19 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
     nport = max(1, len(ports))
     maxlvl = int(lvl.max()) if n else 0
 
+    # ---- opt-in INT telemetry (CostModel.sim_telemetry): sampled series
+    # via the collector + per-entry arrival/departure/max-depth arrays
+    tel = None
+    if getattr(cm, "sim_telemetry", False):
+        from repro.telemetry.fabric import VoqCollector
+
+        tel = VoqCollector(
+            getattr(cm, "sim_telemetry_interval", 16.0), esw, pid, ns, nport
+        )
+        tl_first = np.full(n, _INF)  # first fluid arrival per entry
+        tl_done = np.zeros(n)  # retirement tick per entry
+        tl_maxq = np.zeros(n)  # deepest effective backlog per entry
+
     # ------------------------------------------------------- dense state --
     q = np.zeros(n)
     fut = np.zeros(n)
@@ -264,6 +277,8 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
         w = f.packets if busy_now else f.packets - 1
         if w > 0:
             queued_s[s] += w
+        if tel is not None:
+            tl_first[base] = tt
 
     def complete(fid: int, tt: float) -> None:
         d = flows[fid].dst
@@ -291,6 +306,8 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
                 prio[e] = tt
                 started[e] = False
                 queued_s[esw[e]] += m
+                if tel is not None:
+                    tl_first[e] = tt
                 return
             tt += m  # pragma: no cover - reduce with no routed in-edges
         node_ready(name, tt)
@@ -513,6 +530,9 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
         # (q is zero on inactive entries, so qeff needs no active mask)
         fill = np.minimum(q, np.maximum(eff_in, rate) * latency)
         qeff = q - fill
+        if tel is not None:
+            np.maximum(tl_maxq, qeff, out=tl_maxq)
+            tel_q0 = q.copy() if tel.pending(t, dt) else None
         dep_total = float(qeff.sum())
         if dep_total > _EPS:
             dep_sw = np.bincount(esw, weights=qeff, minlength=ns)
@@ -564,6 +584,16 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
         np.maximum(fut, 0.0, out=fut)
         t += dt
         prev_rate = rate
+        if tel is not None:
+            # fluid arrival time of each entry's first packets: the step
+            # in which its queue first became non-empty
+            np.copyto(tl_first, t, where=np.isinf(tl_first) & (q > _EPS))
+            if tel_q0 is not None:
+                # queues move linearly inside the step — interpolate the
+                # sample ticks that landed in (t-dt, t]
+                tel.sample(t - dt, dt, tel_q0, q,
+                           qeff, np.maximum(q - fill, 0.0),
+                           drops_p, blocked_p)
 
         # busy-period priorities: reset on drain, stamp on backlog formation
         has_backlog = active & (q > _RETIRE)
@@ -582,6 +612,8 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
                 break
             fin_idx = idx[fin]
             active[fin_idx] = False
+            if tel is not None:
+                tl_done[fin_idx] = t
             q[fin_idx] = 0.0
             fut[fin_idx] = 0.0
             d_idx = dn[fin_idx]
@@ -615,6 +647,26 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
     time_s = makespan * cm.tick_s + recirc_count * cm.recirculation_s
     total = makespan if makespan > 0 else 1.0
 
+    timeline = None
+    if tel is not None:
+        hop_meta = []
+        for i in range(n):
+            fid = int(eflow[i])
+            if fid >= 0:
+                f = flows[fid]
+                hop_meta.append(
+                    (i, f.src, f.dst, int(lvl[i]), int(esw[i]), int(pid[i]))
+                )
+            else:  # loopback recirculation entry
+                name = recirc_label[i]
+                hop_meta.append((i, name, name, 0, int(esw[i]), int(pid[i])))
+        timeline = tel.finish(
+            engine="vectorized", makespan=makespan,
+            switches=switches, ports=ports,
+            served_tot=served_tot, pid_full=pid, hop_meta=hop_meta,
+            first_t=tl_first, done_t=tl_done, maxq=tl_maxq,
+        )
+
     def port_dict(vals: np.ndarray) -> dict:
         return {
             (switches[a], switches[b]): float(v)
@@ -647,6 +699,7 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
         port_drops=port_dict(drops_p),
         port_blocked_ticks=port_dict(blocked_p),
         dropped_packets=float(dropped),
+        timeline=timeline,
     )
 
 

@@ -18,8 +18,9 @@ cannot see — shows up as ``combined`` vs ``solo`` makespans.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Hashable, Mapping, Sequence
+from typing import Any, Hashable, Iterator, Mapping, Sequence
 
 from repro.core import dag
 
@@ -172,13 +173,32 @@ class Session:
         *,
         cost_model=None,
         options: "CompileOptions | str | None" = None,
+        telemetry: "Any | bool | None" = None,
     ):
         from repro import compiler
+        from repro.telemetry import Telemetry
 
         self.topology = topology
         self.cost_model = cost_model if cost_model is not None else compiler.CostModel()
         self.options = CompileOptions.of(options)
         self.plans: dict[str, Any] = {}
+        # ``telemetry=True`` builds a fresh Tracer + MetricsRegistry that
+        # every compile/tune/simulate on this session writes into
+        # (repro.telemetry); pass an existing Telemetry to share one
+        # across sessions. None/False disables — zero overhead.
+        self.telemetry = Telemetry.of(telemetry)
+
+    @contextlib.contextmanager
+    def _scope(self, name: str, **attrs: Any) -> Iterator[dict]:
+        """A traced span with the session tracer installed ambiently, so
+        pass / autotune / plan spans nest under the session call — or a
+        no-op when telemetry is off."""
+        if self.telemetry is None:
+            yield {}
+            return
+        with self.telemetry.activate():
+            with self.telemetry.tracer.span(name, **attrs) as span_attrs:
+                yield span_attrs
 
     # ------------------------------------------------------------ compile --
     def _resolve(self, job) -> tuple[Any, str | None]:
@@ -232,15 +252,20 @@ class Session:
 
         opts = CompileOptions.of(options) if options is not None else self.options
         src, jobname = self._resolve(job)
-        plan = compiler.compile(
-            src,
-            self.topology,
-            passes=opts.pass_list(),
-            cost_model=self.cost_model,
-            pins=pins,
-            options=opts.driver_options(),
-        )
-        self._register(name, plan, derived=jobname)
+        with self._scope(
+            "session.compile", job=name or jobname or "job", preset=opts.preset
+        ):
+            plan = compiler.compile(
+                src,
+                self.topology,
+                passes=opts.pass_list(),
+                cost_model=self.cost_model,
+                pins=pins,
+                options=opts.driver_options(),
+            )
+        key = self._register(name, plan, derived=jobname)
+        if self.telemetry is not None:
+            self.telemetry.record_compile(plan, name=key)
         return plan
 
     def compile_best(
@@ -272,17 +297,24 @@ class Session:
                 (optimizing,) if optimizing == baseline else (optimizing, baseline)
             )
         src, jobname = self._resolve(job)
-        plan = compiler.compile_best(
-            src,
-            self.topology,
-            pipelines=pipelines,
-            cost_model=self.cost_model,
-            pins=pins,
-            autotune=autotune,
-            objective=objective,
-            options=opts.driver_options(),
-        )
-        self._register(name, plan, derived=jobname)
+        with self._scope(
+            "session.compile_best",
+            job=name or jobname or "job",
+            pipelines=len(tuple(pipelines)),
+        ):
+            plan = compiler.compile_best(
+                src,
+                self.topology,
+                pipelines=pipelines,
+                cost_model=self.cost_model,
+                pins=pins,
+                autotune=autotune,
+                objective=objective,
+                options=opts.driver_options(),
+            )
+        key = self._register(name, plan, derived=jobname)
+        if self.telemetry is not None:
+            self.telemetry.record_compile(plan, name=key)
         return plan
 
     def arbitrate_buckets(
@@ -300,17 +332,22 @@ class Session:
         from repro import shuffle
 
         opts = CompileOptions.of(options) if options is not None else self.options
-        plan = shuffle.arbitrate_buckets(
-            program_or_factory,
-            self.topology,
-            candidates,
-            cost_model=self.cost_model,
-            pins=pins,
-            passes=opts.pass_list(),
-            options=opts.driver_options(),
-            objective=objective,
-        )
-        self._register(name, plan)
+        with self._scope(
+            "session.arbitrate_buckets", candidates=len(tuple(candidates))
+        ):
+            plan = shuffle.arbitrate_buckets(
+                program_or_factory,
+                self.topology,
+                candidates,
+                cost_model=self.cost_model,
+                pins=pins,
+                passes=opts.pass_list(),
+                options=opts.driver_options(),
+                objective=objective,
+            )
+        key = self._register(name, plan)
+        if self.telemetry is not None:
+            self.telemetry.record_compile(plan, name=key)
         return plan
 
     # ----------------------------------------------------------- simulate --
@@ -345,15 +382,19 @@ class Session:
             picked = {n: self.plans[n] for n in names}
         if not picked:
             raise ValueError("session has no compiled jobs to simulate")
-        program, routes = merge_plans(picked)
-        combined = simulate_timing(program, routes, self.cost_model, engine=engine)
-        solo = {n: pl.simulate_timing(engine=engine) for n, pl in picked.items()}
-        outputs = None
-        if inputs is not None:
-            unknown = [n for n in inputs if n not in picked]
-            if unknown:
-                raise KeyError(
-                    f"inputs for unknown job(s) {unknown}; have {sorted(picked)}"
-                )
-            outputs = {n: picked[n].execute_reference(inputs[n]) for n in inputs}
+        with self._scope("session.simulate", jobs=len(picked)) as scope_attrs:
+            program, routes = merge_plans(picked)
+            combined = simulate_timing(program, routes, self.cost_model, engine=engine)
+            solo = {n: pl.simulate_timing(engine=engine) for n, pl in picked.items()}
+            outputs = None
+            if inputs is not None:
+                unknown = [n for n in inputs if n not in picked]
+                if unknown:
+                    raise KeyError(
+                        f"inputs for unknown job(s) {unknown}; have {sorted(picked)}"
+                    )
+                outputs = {n: picked[n].execute_reference(inputs[n]) for n in inputs}
+            scope_attrs["makespan_ticks"] = combined.makespan_ticks
+        if self.telemetry is not None:
+            self.telemetry.record_simulation(combined, label="combined")
         return SessionReport(combined=combined, solo=solo, outputs=outputs)

@@ -38,9 +38,9 @@ class ShuffleStats:
 
     @property
     def hot_bucket(self) -> int | None:
-        if not self.bucket_wire_bytes:
-            return None
-        return max(self.bucket_wire_bytes, key=lambda b: (self.bucket_wire_bytes[b], -b))
+        from repro.telemetry.fabric import hottest
+
+        return hottest(self.bucket_wire_bytes)
 
 
 def plan_shuffle(plan) -> ShuffleStats | None:

@@ -198,6 +198,58 @@ def test_differential_multi_job_shared_fabric():
     _assert_close(rep_e, rep_v)
 
 
+def test_differential_telemetry_on_seeded_fat_tree_shuffle():
+    """INT-style fabric telemetry must agree across engines on a seeded
+    skewed fat-tree shuffle: per-port forwarded-packet totals exactly
+    (both engines push the identical trains over the identical routes),
+    and the tick-sampled queue-depth series to fluid-vs-event tolerance —
+    the event engine books an in-flight train at consecutive hops during
+    its service window where the fluid core transfers conservatively, an
+    intrinsic modelling gap, not noise."""
+    hosts = [f"h{i}" for i in range(4)]
+    topo = topology.fat_tree_topology(4)
+    raw = [(i + 1) ** 2.0 for i in range(4)]
+    prog = wordcount.wordcount_shuffle_program(
+        4, 512, num_buckets=4, weights=[w / sum(raw) for w in raw],
+        hosts=hosts, sink_host=f"h{len(topo.hosts) - 1}",
+    )
+    plan = _compile(prog, topo)
+    cm = dataclasses.replace(
+        plan.cost_model, sim_telemetry=True, sim_telemetry_interval=4.0
+    )
+    plan = dataclasses.replace(plan, cost_model=cm)
+    tl_e = plan.simulate_timing(engine="event").timeline
+    tl_v = plan.simulate_timing(engine="vectorized").timeline
+    assert tl_e is not None and tl_v is not None
+    assert tl_e.engine == "event" and tl_v.engine == "vectorized"
+
+    # per-port packet totals: exact equality, port for port
+    assert set(tl_e.port_packets) == set(tl_v.port_packets)
+    for port, pkts in tl_e.port_packets.items():
+        assert tl_v.port_packets[port] == pytest.approx(pkts), port
+
+    # both sampled the same grid; the fabric-wide queue-depth integral
+    # agrees within the fluid-approximation envelope
+    assert tl_e.interval_ticks == tl_v.interval_ticks == 4.0
+    int_e, int_v = tl_e.depth_integral(), tl_v.depth_integral()
+    assert int_e > 0 and int_v > 0
+    assert abs(int_e - int_v) <= 0.35 * max(int_e, int_v), (int_e, int_v)
+
+    # the sampled series integrates against the same totals the report
+    # already carries: cumulative drops/blocked end at the report counters
+    rep_v = plan.simulate_timing(engine="vectorized")
+    assert sum(tl_v.final_drops().values()) == pytest.approx(rep_v.dropped_packets)
+    for port, ticks in tl_v.final_blocked().items():
+        assert ticks == pytest.approx(rep_v.port_blocked_ticks[port]), port
+
+    # hop records exist for every flow and carry the INT triple
+    assert tl_e.hop_records and tl_v.hop_records
+    for rec in tl_v.hop_records:
+        assert rec.hop_latency_ticks >= 0
+        assert rec.queue_depth_at_dequeue >= 0
+        assert 0.0 <= rec.utilization <= 1.0
+
+
 def test_fifo_fidelity_is_bit_exact_with_event_engine():
     """fidelity="fifo" runs the same arithmetic on the calendar scheduler
     — every report field must match the reference heap exactly."""

@@ -1,0 +1,308 @@
+"""Unit + end-to-end tests for ``repro.telemetry``.
+
+Four layers:
+
+* **trace** — Tracer span collection, Chrome trace export, ambient
+  activation, and the structural validator (which must also *reject*
+  broken traces, or the CI smoke gate is theater);
+* **metrics** — registry instruments, JSON round-trip, the text
+  dashboard renderer;
+* **fabric** — the unified pressure/ranking helpers every hotspot
+  consumer (hot_switch, reroute-feedback, autotune) now shares;
+* **session** — one Session run with telemetry on produces the full
+  surface (spans for every pass/tune round/simulate, fabric timeline,
+  populated registry), and with telemetry off nothing is paid.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro import compiler, p4mr
+from repro.compiler.cost import CostModel
+from repro.core import topology, wordcount
+from repro.telemetry import (
+    MetricsRegistry,
+    Telemetry,
+    Tracer,
+    activate,
+    current_tracer,
+    hottest,
+    link_pressure,
+    maybe_span,
+    normalized,
+    rank_cold,
+    rank_hot,
+    switch_pressure,
+    validate_chrome_trace,
+)
+from repro.telemetry import report as tel_report
+
+
+# ------------------------------------------------------------------ trace --
+def test_tracer_spans_nest_and_export_valid_chrome_trace():
+    tr = Tracer()
+    with tr.span("outer", kind="compile") as attrs:
+        attrs["result"] = "ok"
+        with tr.span("inner"):
+            pass
+    assert [s.name for s in tr.spans] == ["inner", "outer"]  # closed in order
+    trace = tr.to_chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    # export is parent-first (sorted by start, longer span on ties)
+    assert [e["name"] for e in trace["traceEvents"]] == ["outer", "inner"]
+    outer = trace["traceEvents"][0]
+    assert outer["ph"] == "X" and outer["args"]["result"] == "ok"
+
+
+def test_tracer_add_anchors_span_at_its_end():
+    tr = Tracer()
+    sp = tr.add("adopted", dur_us=50.0, summary="s")
+    assert sp.dur_us == 50.0 and sp.ts_us >= 0.0
+    assert tr.to_chrome_trace()["traceEvents"][0]["args"]["summary"] == "s"
+
+
+def test_ambient_tracer_activation_scopes_and_nullcontext():
+    assert current_tracer() is None
+    with maybe_span(current_tracer(), "ignored") as attrs:
+        attrs["write"] = "to a throwaway dict"  # must not raise
+    tr = Tracer()
+    with activate(tr):
+        assert current_tracer() is tr
+        with maybe_span(current_tracer(), "real"):
+            pass
+    assert current_tracer() is None
+    assert [s.name for s in tr.spans] == ["real"]
+
+
+def test_validator_rejects_malformed_traces():
+    assert validate_chrome_trace("nope")
+    assert validate_chrome_trace({"events": []})
+    assert validate_chrome_trace({"traceEvents": [{"ph": "X", "ts": -1, "name": "a"}]})
+    assert validate_chrome_trace(
+        {"traceEvents": [{"ph": "Z", "ts": 0, "name": "a"}]}
+    )
+    # non-monotonic timestamps on one track
+    errs = validate_chrome_trace({"traceEvents": [
+        {"name": "b", "ph": "X", "ts": 100, "dur": 1},
+        {"name": "a", "ph": "X", "ts": 0, "dur": 1},
+    ]})
+    assert any("non-monotonic" in e for e in errs)
+    # straddling spans: [0, 100) and [50, 150) neither nest nor disjoint
+    errs = validate_chrome_trace({"traceEvents": [
+        {"name": "a", "ph": "X", "ts": 0, "dur": 100},
+        {"name": "b", "ph": "X", "ts": 50, "dur": 100},
+    ]})
+    assert any("crosses the boundary" in e for e in errs)
+    # properly nested + disjoint passes
+    assert validate_chrome_trace({"traceEvents": [
+        {"name": "a", "ph": "X", "ts": 0, "dur": 100},
+        {"name": "b", "ph": "X", "ts": 10, "dur": 20},
+        {"name": "c", "ph": "X", "ts": 40, "dur": 60},
+        {"name": "d", "ph": "X", "ts": 200, "dur": 5},
+    ]}) == []
+
+
+# ---------------------------------------------------------------- metrics --
+def test_metrics_registry_instruments_and_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(2)
+    assert reg.counter("c") is reg.counters["c"]  # get-or-create
+    with pytest.raises(ValueError, match="cannot decrease"):
+        reg.counter("c").inc(-1)
+    reg.gauge("g").set(7)
+    for v in (1.0, 2.0, 3.0, 10.0):
+        reg.histogram("h").observe(v)
+    reg.series("s").extend([0, 1, 2], [5.0, 6.0, 7.0])
+    reg.table("t").add(("A", "B"), 3)
+    reg.table("t").add(("A", "B"), 1)
+    reg.table("t").add("other", 1)
+    assert reg.table("t").top(1) == [("('A', 'B')", 4.0)]
+
+    d = reg.to_dict()
+    assert d["counters"]["c"] == 3.0 and d["gauges"]["g"] == 7.0
+    assert d["histograms"]["h"]["count"] == 4
+    assert d["histograms"]["h"]["mean"] == pytest.approx(4.0)
+    assert d["histograms"]["h"]["p50"] in (2.0, 3.0)  # nearest-rank of 4 samples
+    assert d["series"]["s"] == [(0.0, 5.0), (1.0, 6.0), (2.0, 7.0)]
+
+    path = tmp_path / "metrics.json"
+    reg.write(str(path))
+    loaded = MetricsRegistry.load(str(path))
+    assert loaded["counters"] == d["counters"]
+    assert loaded["tables"] == d["tables"]
+
+
+def test_report_renders_dashboard_and_cli(tmp_path, capsys):
+    reg = MetricsRegistry()
+    reg.counter("session.compiles").inc()
+    reg.histogram("pass.place.wall_us").observe(100.0)
+    reg.histogram("pass.route.wall_us").observe(300.0)
+    reg.table("fabric.port_packets").add("a→b", 12)
+    reg.series("fabric.queue_depth").extend([0, 4, 8], [1.0, 9.0, 2.0])
+    text = tel_report.render(reg.to_dict())
+    assert "per-pass compile time" in text
+    assert "route" in text and "place" in text
+    assert "a→b" in text and "peak 9 pkts" in text
+
+    path = tmp_path / "m.json"
+    reg.write(str(path))
+    assert tel_report.main([str(path), "--top", "3"]) == 0
+    assert "session.compiles" in capsys.readouterr().out
+
+
+def test_sparkline_downsamples_to_width():
+    line = tel_report.sparkline([0, 1, 2, 3, 4, 5, 6, 7], width=4)
+    assert len(line) == 4
+    assert line[-1] == "█"  # max lands in the last bucket
+
+
+# ----------------------------------------------------------------- fabric --
+class _FakeReport:
+    """Just the pressure-relevant slice of a SimReport."""
+
+    def __init__(self, queued=None, drops=None, voq=None, pdrops=None, blocked=None):
+        self.queued_batches = queued or {}
+        self._drops = drops or {}
+        self.voq_depth = voq or {}
+        self.port_drops = pdrops or {}
+        self.port_blocked_ticks = blocked or {}
+
+    def switch_drops(self):
+        return self._drops
+
+
+def test_pressure_helpers_combine_signals():
+    rep = _FakeReport(
+        queued={"A": 5, "B": 2}, drops={"B": 4.0, "C": 1.0},
+        voq={("A", "B"): 3.0}, pdrops={("A", "B"): 1.0},
+        blocked={("B", "C"): 2.0},
+    )
+    assert switch_pressure(rep) == {"A": 5.0, "B": 6.0, "C": 1.0}
+    assert link_pressure(rep) == {("A", "B"): 4.0, ("B", "C"): 2.0}
+    norm = normalized(switch_pressure(rep))
+    assert max(norm.values()) < 1.0
+    assert norm["B"] == pytest.approx(6.0 / 7.0)
+    assert normalized({}) == {}
+
+
+def test_rank_helpers_have_deterministic_tie_order():
+    pressure = {"s2": 1.0, "s10": 1.0, "s1": 3.0}
+    # hottest first; the s2/s10 tie breaks by stringified id ascending
+    assert rank_hot(pressure) == ["s1", "s10", "s2"]
+    # a secondary signal outranks the id tie-break
+    assert rank_hot(pressure, secondary={"s2": 9.0}) == ["s1", "s2", "s10"]
+    assert hottest(pressure) == "s1"
+    assert hottest({}) is None
+    # coldest-first over explicit keys; missing keys count as zero
+    assert rank_cold(pressure, ["s1", "s2", "absent"]) == ["absent", "s2", "s1"]
+
+
+def test_hot_switch_and_hot_bucket_use_unified_tie_break():
+    from repro.compiler.simulator import SimReport
+    from repro.shuffle.stats import ShuffleStats
+
+    rep = SimReport(
+        makespan_ticks=10, queue_delay_ticks=0,
+        queued_batches={"X": 3, "Y": 3}, switch_busy_ticks={},
+        max_queue_depth={}, recirculations=0, edge_hops=0, packet_hops=0,
+        wire_bytes=0.0, time_s=0.0,
+    )
+    assert rep.hot_switch == "X"  # tie → stringified id ascending
+    stats = ShuffleStats(
+        num_buckets=2, bucket_items={}, bucket_wire_bytes={0: 5.0, 1: 5.0},
+        bucket_switch={}, residency_by_switch={}, total_wire_bytes=10.0,
+    )
+    assert stats.hot_bucket == 0
+
+
+# ---------------------------------------------------------------- session --
+def _shuffle_program():
+    return wordcount.wordcount_shuffle_program(
+        4, 64, num_buckets=4, weights=(4.0, 1.0, 1.0, 1.0),
+        hosts=[f"h{i}" for i in range(4)], sink_host="h15",
+    )
+
+
+def test_session_end_to_end_telemetry_surface(tmp_path):
+    cm = CostModel(sim_telemetry=True, sim_telemetry_interval=8.0)
+    sess = p4mr.Session(
+        topology.fat_tree_topology(4), cost_model=cm, telemetry=True,
+        options=p4mr.CompileOptions(preset="autotuned", autotune_rounds=1),
+    )
+    plan = sess.compile(_shuffle_program(), name="wc")
+    rep = sess.simulate()
+
+    # (a) Perfetto-loadable trace with spans for every pass, every
+    # autotune round, and the simulate call
+    trace = sess.telemetry.tracer.to_chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    names = [e["name"] for e in trace["traceEvents"]]
+    spanned_passes = {n[len("pass:"):] for n in names if n.startswith("pass:")}
+    assert {r.name for r in plan.pass_records} <= spanned_passes
+    assert any(n.startswith("tune:round-") for n in names)
+    assert any(n.startswith("eval:") for n in names)
+    assert "session.compile" in names and "session.simulate" in names
+    assert "plan.simulate_timing" in names
+
+    # (b) the timeline's sampled series integrates to the same totals the
+    # report's existing counters carry
+    tl = rep.combined.timeline
+    assert tl is not None and tl.hop_records
+    assert sum(tl.port_packets.values()) == pytest.approx(
+        rep.combined.packet_hops + rep.combined.recirculations
+    )
+    assert sum(tl.final_drops().values()) == pytest.approx(
+        rep.combined.dropped_packets
+    )
+
+    # the registry saw the compile, the tuning and the simulation
+    md = sess.telemetry.metrics.to_dict()
+    assert md["counters"]["session.compiles"] == 1.0
+    assert md["counters"]["session.simulations"] == 1.0
+    assert md["counters"]["tune.rounds"] >= 1.0
+    assert md["gauges"]["fabric.combined.makespan_ticks"] == rep.combined.makespan_ticks
+    assert md["tables"]["fabric.port_packets"]
+    assert md["series"]["fabric.queue_depth"]
+    assert any(k.startswith("pass.") for k in md["histograms"])
+
+    # artifacts round-trip
+    sess.telemetry.write_trace(str(tmp_path / "trace.json"))
+    sess.telemetry.write_metrics(str(tmp_path / "metrics.json"))
+    with open(tmp_path / "trace.json") as f:
+        assert validate_chrome_trace(json.load(f)) == []
+
+
+def test_telemetry_off_pays_nothing():
+    sess = p4mr.Session(topology.fat_tree_topology(4))
+    sess.compile(_shuffle_program(), name="wc")
+    rep = sess.simulate()
+    assert sess.telemetry is None
+    # default cost model: no fabric collection at all
+    assert rep.combined.timeline is None
+    assert CostModel().sim_telemetry is False
+
+
+def test_telemetry_of_coercion():
+    assert Telemetry.of(None) is None
+    assert Telemetry.of(False) is None
+    t = Telemetry.of(True)
+    assert isinstance(t, Telemetry) and Telemetry.of(t) is t
+    with pytest.raises(TypeError):
+        Telemetry.of("yes")
+
+
+def test_timeline_present_for_both_engines_without_session():
+    prog = _shuffle_program()
+    topo = topology.fat_tree_topology(4)
+    plan = compiler.compile(prog, topo, passes=compiler.STATIC_ECMP_PASSES)
+    cm = dataclasses.replace(
+        plan.cost_model, sim_telemetry=True, sim_telemetry_interval=4.0
+    )
+    plan = dataclasses.replace(plan, cost_model=cm)
+    for engine in ("event", "vectorized"):
+        tl = plan.simulate_timing(engine=engine).timeline
+        assert tl is not None and tl.engine == engine
+        assert tl.to_dict()["interval_ticks"] == 4.0
+        assert tl.depth_integral() >= 0.0
