@@ -1,0 +1,122 @@
+"""Scheduler benchmark: what the online multi-tenant layer recovers.
+
+Two cells, both on the k=4 fat-tree, writing BENCH_scheduler.json
+(gated by CI's bench-smoke regression check):
+
+* ``sched.fat_tree_k4.two_wordcounts`` — the exact contention pair from
+  BENCH_compile's multi-job cell (combined 119t vs 87t solo): both
+  tenants submitted at tick 0, scheduled vs the unscheduled merge. The
+  acceptance bar for the subsystem lives here: ``makespan_ticks_scheduled``
+  must be strictly below the unscheduled merge and never above it.
+* ``sched.fat_tree_k4.staggered_arrivals`` — three tenants submitted at
+  ticks 0/30/60 with weights and one deadline, under the "deadline"
+  objective: the scheduler's arrival model + SLO steering on a rolling
+  fabric.
+
+    PYTHONPATH=src:. python benchmarks/run.py scheduler
+    PYTHONPATH=src:. python benchmarks/bench_scheduler.py
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro import p4mr
+from repro.core import topology
+
+from benchmarks._provenance import write_bench
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_scheduler.json")
+
+
+def _wordcount_tenant(name: str, hosts: list[str], sink: str, vocab: int) -> p4mr.Job:
+    # identical shape to bench_compile's two-tenant cell
+    job = p4mr.job(name)
+    keyed = [
+        job.store(f"s{i}", host=h, items=vocab).key_by(4)
+        for i, h in enumerate(hosts)
+    ]
+    keyed[0].reduce("SUM", *keyed[1:], label="R").collect(sink, label="OUT")
+    return job
+
+
+def _contention_pair_case() -> dict:
+    """BENCH_compile's two-wordcount contention cell, scheduled."""
+    ft = topology.fat_tree_topology(4)
+    sess = p4mr.Session(ft)
+    sched = p4mr.Scheduler(sess, reroute_rounds=3)
+    sched.submit(_wordcount_tenant("tenant_a", [f"h{i}" for i in range(4)], "h15", 64),
+                 name="tenant_a")
+    sched.submit(_wordcount_tenant("tenant_b", [f"h{i}" for i in range(4, 8)], "h12", 64),
+                 name="tenant_b")
+    t0 = time.perf_counter()
+    rep = sched.run()
+    schedule_us = (time.perf_counter() - t0) * 1e6
+    assert rep.makespan_ticks <= rep.unscheduled_makespan_ticks, rep.summary()
+    return {
+        "name": "sched.fat_tree_k4.two_wordcounts",
+        "schedule_us": round(schedule_us, 2),
+        "makespan_ticks_scheduled": rep.makespan_ticks,
+        "makespan_ticks_unscheduled": rep.unscheduled_makespan_ticks,
+        "recovered_ticks": rep.recovered_ticks,
+        "contention_ticks": rep.contention_ticks,
+        "makespan_ticks_solo_a": rep.solo_makespan_ticks["tenant_a"],
+        "makespan_ticks_solo_b": rep.solo_makespan_ticks["tenant_b"],
+        "weighted_flow_ticks": rep.weighted_flow_ticks,
+        "admitted": len(rep.admitted),
+        "hot_swaps_accepted": sum(1 for s in rep.hot_swaps if s.accepted),
+    }
+
+
+def _staggered_case() -> dict:
+    """Three tenants arriving at ticks 0/30/60 under the deadline
+    objective — the online story: admission order and tie-breaks follow
+    the SLO, and late arrivals ride a fabric that is already loaded."""
+    ft = topology.fat_tree_topology(4)
+    sess = p4mr.Session(ft)
+    sched = p4mr.Scheduler(sess, objective="deadline", reroute_rounds=2)
+    sched.submit(_wordcount_tenant("etl", [f"h{i}" for i in range(4)], "h15", 64),
+                 name="etl", at=0, weight=1.0)
+    sched.submit(_wordcount_tenant("urgent", [f"h{i}" for i in range(4, 8)], "h12", 64),
+                 name="urgent", at=30, deadline=150, weight=2.0)
+    sched.submit(_wordcount_tenant("batch", [f"h{i}" for i in range(8, 12)], "h0", 64),
+                 name="batch", at=60, weight=0.5)
+    t0 = time.perf_counter()
+    rep = sched.run()
+    schedule_us = (time.perf_counter() - t0) * 1e6
+    assert rep.makespan_ticks <= rep.unscheduled_makespan_ticks, rep.summary()
+    return {
+        "name": "sched.fat_tree_k4.staggered_arrivals",
+        "schedule_us": round(schedule_us, 2),
+        "makespan_ticks_scheduled": rep.makespan_ticks,
+        "makespan_ticks_unscheduled": rep.unscheduled_makespan_ticks,
+        "recovered_ticks": rep.recovered_ticks,
+        "contention_ticks": rep.contention_ticks,
+        "weighted_flow_ticks": rep.weighted_flow_ticks,
+        "deadline_miss_ticks": sum(rep.deadline_miss_ticks.values()),
+        "admitted": len(rep.admitted),
+        "hot_swaps_accepted": sum(1 for s in rep.hot_swaps if s.accepted),
+    }
+
+
+def run() -> list[tuple[str, float, str]]:
+    records = [_contention_pair_case(), _staggered_case()]
+    write_bench(OUT_PATH, records)
+    rows = []
+    for r in records:
+        rows.append((
+            f"scheduler.{r['name']}", r["schedule_us"],
+            f"scheduled={r['makespan_ticks_scheduled']}t "
+            f"unscheduled={r['makespan_ticks_unscheduled']}t "
+            f"recovered={r['recovered_ticks']}t "
+            f"contention=+{r['contention_ticks']}t "
+            f"wflow={r['weighted_flow_ticks']}",
+        ))
+    rows.append(("scheduler.artifact", 0.0, f"wrote {os.path.basename(OUT_PATH)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row, us, derived in run():
+        print(f"{row},{us:.2f},{derived}")

@@ -8,10 +8,11 @@ like ``compile_us``/``simulate_us``, which vary with the runner. All
 gated metrics are lower-is-better.
 
 Records are matched by their identity fields (name, topology,
-num_buckets, skew — whichever are present). A baseline record missing
-from the current run fails too (silent coverage loss reads as "no
-regression" otherwise); records only present in the current run are
-reported but pass — they are new coverage awaiting a baseline.
+num_buckets, skew — whichever are present). Coverage mismatches fail in
+*both* directions: a baseline record missing from the current run is
+silent coverage loss, and a current record missing from the baseline is
+an ungated cell masquerading as green — regenerate and commit the
+baseline, or pass ``--allow-new`` for the one run that introduces it.
 
     python benchmarks/check_regression.py \
         --baseline /tmp/bench-baseline/BENCH_shuffle.json \
@@ -38,8 +39,11 @@ GATED_METRICS = (
     "makespan_ticks",
     "makespan_ticks_static",
     "makespan_ticks_feedback",
+    "makespan_ticks_scheduled",
+    "makespan_ticks_unscheduled",
     "queue_delay_ticks",
     "queue_delay_ticks_static",
+    "weighted_flow_ticks",
     "wire_bytes",
 )
 # higher-is-better metrics: the vectorized simulator's throughput edge.
@@ -64,10 +68,35 @@ def cell_label(key: tuple) -> str:
     return " ".join(f"{k}={v}" for k, v in key) or "<record>"
 
 
-def check(baseline: list[dict], current: list[dict], tolerance: float) -> list[str]:
+def check(
+    baseline: list[dict],
+    current: list[dict],
+    tolerance: float,
+    *,
+    allow_new: bool = False,
+) -> list[str]:
+    """Compare ``current`` records against ``baseline``; returns the list
+    of failure messages (empty = gate passes).
+
+    A current record with no baseline counterpart is an error unless
+    ``allow_new`` — a cell the gate silently skips would read as green
+    while measuring nothing."""
     cur_by_key = {record_key(r): r for r in current}
     errors: list[str] = []
     compared = 0
+    base_keys = {record_key(b) for b in baseline}
+    for rec in current:
+        key = record_key(rec)
+        if key in base_keys:
+            continue
+        if allow_new:
+            print(f"note: new cell [{cell_label(key)}] has no baseline yet (--allow-new)")
+            continue
+        errors.append(
+            f"cell [{cell_label(key)}]: present in current run but missing from "
+            "the baseline — this cell is NOT gated; regenerate and commit the "
+            "baseline BENCH json (or pass --allow-new to accept it this run)"
+        )
     for base in baseline:
         key = record_key(base)
         label = cell_label(key)
@@ -108,6 +137,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--current", required=True, help="freshly generated BENCH json")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed relative regression (default 0.10 = 10%%)")
+    ap.add_argument("--allow-new", action="store_true",
+                    help="accept current cells that have no baseline yet "
+                         "(default: fail — an ungated cell reads as green)")
     args = ap.parse_args(argv)
     # provenance records (who/when/where the numbers were generated) are
     # metadata, never gated — strip them before comparing
@@ -115,12 +147,7 @@ def main(argv: list[str] | None = None) -> int:
         _, baseline = strip_provenance(json.load(f))
     with open(args.current) as f:
         _, current = strip_provenance(json.load(f))
-    errors = check(baseline, current, args.tolerance)
-    new = len(current) - sum(
-        1 for r in current if record_key(r) in {record_key(b) for b in baseline}
-    )
-    if new:
-        print(f"note: {new} record(s) have no baseline yet (pass; commit to gate them)")
+    errors = check(baseline, current, args.tolerance, allow_new=args.allow_new)
     if errors:
         print(f"FAIL: {len(errors)} regression(s) beyond {100 * args.tolerance:.0f}%:")
         for e in errors:

@@ -18,6 +18,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   bench_kernels         — Pallas kernel oracles + allclose
   bench_roofline        — §Roofline aggregation of the dry-run sweeps
   bench_simulator       — event vs vectorized engine throughput, k∈{4,8}
+  bench_scheduler       — online multi-tenant scheduler vs unscheduled merge
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ from benchmarks import (
     bench_kernels,
     bench_roofline,
     bench_scenarios,
+    bench_scheduler,
     bench_serialization,
     bench_shuffle,
     bench_simulator,
@@ -48,6 +50,7 @@ MODULES = [
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
     ("simulator", bench_simulator),
+    ("scheduler", bench_scheduler),
 ]
 
 

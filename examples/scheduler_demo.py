@@ -1,0 +1,72 @@
+"""Online multi-tenant scheduling on one fat-tree fabric.
+
+Two word-count tenants share the k=4 fat-tree. Run back-to-back at
+tick 0 they contend for core links: the naive merge (compile each job
+alone, then stream both) pays a contention premium over the 87-tick solo
+makespans. ``p4mr.Scheduler`` treats the fabric as an online resource —
+jobs *arrive*, admission is checked against the switch-memory budget,
+later jobs are compiled with penalty seeds from earlier jobs' measured
+pressure, routes get a fleet-wide reroute round over merged traffic,
+and plans whose measured pressure drifts from their compile-time profile
+are hot-swapped through the autotuner. The demo prints the before/after:
+unscheduled contention vs what the scheduler recovers.
+
+    PYTHONPATH=src python examples/scheduler_demo.py
+"""
+from repro import p4mr
+from repro.core import topology
+
+
+def wordcount_tenant(name: str, hosts, sink: str) -> p4mr.Job:
+    job = p4mr.job(name)
+    keyed = [job.store(f"s{i}", host=f"h{h}", items=64).key_by(4)
+             for i, h in enumerate(hosts)]
+    keyed[0].reduce("SUM", *keyed[1:], label="R").collect(sink, label="OUT")
+    return job
+
+
+def main():
+    sess = p4mr.Session(topology.fat_tree_topology(4))
+    sched = p4mr.Scheduler(sess, objective="weighted-makespan", reroute_rounds=3)
+
+    # tenant_a is already running; tenant_b arrives 20 ticks later with a
+    # deadline and a higher weight — the SLO steers admission order and
+    # reroute tie-breaks
+    sched.submit(wordcount_tenant("tenant_a", range(4), "h15"), at=0)
+    sched.submit(wordcount_tenant("tenant_b", range(4, 8), "h12"),
+                 at=20, deadline=200, weight=2.0)
+
+    rep = sched.run()
+    print(rep.summary())
+    print()
+
+    print("before (unscheduled merge of solo-compiled plans):",
+          f"{rep.unscheduled_makespan_ticks} ticks")
+    print("after  (admission + seeded compile + reroute + hot-swap):",
+          f"{rep.makespan_ticks} ticks "
+          f"(recovered {rep.recovered_ticks}, residual contention "
+          f"+{rep.contention_ticks})")
+    for name in sorted(rep.arrivals):
+        print(f"  {name}: arrived @{rep.arrivals[name]:g}, "
+              f"finished @{rep.finish_ticks[name]} "
+              f"(solo {rep.solo_makespan_ticks[name]} ticks)")
+    for adm in rep.admissions:
+        tag = "seeded compile" if adm.seeded else "cold compile"
+        print(f"  admission[{adm.name}]: "
+              f"{'admitted' if adm.admitted else 'REJECTED'} ({tag})")
+    for swap in rep.hot_swaps:
+        print(f"  hot-swap[{swap.name}]: drift {swap.drift:.2f}, "
+              f"{'accepted' if swap.accepted else 'kept old plan'} "
+              f"({swap.makespan_before} -> {swap.makespan_after} ticks)")
+
+    # the scheduler's contract: never worse than the unscheduled merge
+    assert rep.makespan_ticks <= rep.unscheduled_makespan_ticks
+    # and the schedule it reports is reproducible through the session
+    replay = sess.simulate(arrivals=rep.arrivals)
+    assert replay.combined.makespan_ticks == rep.makespan_ticks
+    print("\nreplay via sess.simulate(arrivals=...) reproduces the "
+          f"scheduled makespan: {replay.combined.makespan_ticks} ticks")
+
+
+if __name__ == "__main__":
+    main()

@@ -185,6 +185,18 @@ def compile(
     placement constraints (label → switch id). The returned plan executes
     via ``plan.jax_step()`` (device mesh) or ``plan.simulate()`` (packet
     simulator).
+
+    ``options`` is a free-form dict every pass can read. Keys understood
+    by the built-in pipeline:
+
+    * ``reroute_rounds`` — iteration cap for ``reroute-feedback``.
+    * ``switch_penalty_seed`` / ``link_penalty_seed`` — external
+      contention maps (switch → pressure, (switch, switch) → pressure)
+      that bias ``route`` and ``reroute-feedback`` tie-breaks away from
+      fabric other tenants already load. This is the hook the p4mr
+      scheduler uses for contention-aware compilation: it seeds job B's
+      compile with job A's measured ``telemetry.fabric`` pressure.
+    * ``autotune_rounds`` / ``autotune_actions`` — autotune pass knobs.
     """
     ctx = CompileCtx(
         topology=topology,

@@ -326,8 +326,31 @@ def place_pass(ctx: CompileCtx) -> str:
 
 @register_pass("route")
 def route_pass(ctx: CompileCtx) -> str:
+    """Static routing, optionally *seeded* with external contention.
+
+    ``options["switch_penalty_seed"]`` / ``options["link_penalty_seed"]``
+    (per-switch / per-link pressure maps, e.g. another tenant's measured
+    ``telemetry.fabric`` pressure) bias equal-cost tie-breaks away from
+    fabric another job is already loading. Seeds are re-normalized below
+    packet scale, so they steer ties without overriding this job's own
+    traffic — the p4mr scheduler's contention-aware compile hook.
+    """
     if ctx.placement is None:
         raise ValueError("route pass requires a placement (run 'place' first)")
+    seed = ctx.options.get("switch_penalty_seed") or None
+    link_seed = ctx.options.get("link_penalty_seed") or None
+    if seed or link_seed:
+        from repro.telemetry.fabric import normalized
+
+        ctx.routes = build_routes(
+            ctx.require_program(), ctx.topology, ctx.placement,
+            switch_penalty=normalized(seed) if seed else None,
+            link_penalty=normalized(link_seed) if link_seed else None,
+        )
+        return (
+            f"{len(ctx.routes.routes)} routes, total_hops={ctx.routes.total_hops}, "
+            f"seeded ({len(seed or ())} switch / {len(link_seed or ())} link)"
+        )
     ctx.routes = build_routes(ctx.require_program(), ctx.topology, ctx.placement)
     return f"{len(ctx.routes.routes)} routes, total_hops={ctx.routes.total_hops}"
 
@@ -379,6 +402,20 @@ def reroute_feedback_pass(ctx: CompileCtx) -> str:
     best, best_rep = cur, cur_rep
     from repro.telemetry.fabric import link_pressure, normalized, switch_pressure
 
+    # external contention seeds (see route_pass): folded into every
+    # round's measured penalties so tie-breaks keep avoiding fabric other
+    # tenants load even as this job's own feedback evolves
+    seed = normalized(ctx.options.get("switch_penalty_seed") or {})
+    link_seed = normalized(ctx.options.get("link_penalty_seed") or {})
+
+    def _fold(measured: dict, extern: dict) -> dict:
+        if not extern:
+            return measured
+        keys = set(measured) | set(extern)
+        return normalized(
+            {k: measured.get(k, 0.0) + extern.get(k, 0.0) for k in keys}
+        )
+
     for round_no in range(1, max_rounds + 1):
         # per-switch: measured queueing + packets dropped at the switch's
         # full buffer (the latter is zero under the infinite default);
@@ -386,8 +423,8 @@ def reroute_feedback_pass(ctx: CompileCtx) -> str:
         # report came from the event engine). Both read the unified
         # telemetry pressure surface and are normalized below packet
         # scale so they steer ties rather than override traffic.
-        penalty = normalized(switch_pressure(cur_rep))
-        link_penalty = normalized(link_pressure(cur_rep))
+        penalty = _fold(normalized(switch_pressure(cur_rep)), seed)
+        link_penalty = _fold(normalized(link_pressure(cur_rep)), link_seed)
         nxt = build_routes(
             p, ctx.topology, ctx.placement,
             edge_weight=weights, switch_penalty=penalty, link_penalty=link_penalty,

@@ -77,6 +77,16 @@ ENGINES = ("event", "vectorized")
 
 @dataclasses.dataclass(frozen=True)
 class SimReport:
+    """Timing half of one simulation run (both engines produce this).
+
+    ``makespan_ticks`` is the tick the last program sink completed —
+    measured from tick 0 of the shared clock, so under staggered-release
+    traffic (``simulate_timing(..., release=...)``) it is an absolute
+    completion time, not a duration. ``sink_finish_ticks`` carries the
+    per-sink completion ticks, which is how a multi-job merged run
+    (``Session.simulate`` / the p4mr scheduler) recovers per-job finish
+    times from one shared simulation."""
+
     edge_hops: int  # Σ route hops (matches RoutingTable.total_hops)
     packet_hops: int  # hop traversals × packets per train
     recirculations: int
@@ -109,6 +119,9 @@ class SimReport:
     # INT-style fabric telemetry (repro.telemetry.fabric.Timeline) when
     # CostModel.sim_telemetry was set; None on the default fast path
     timeline: Any = None
+    # per-sink completion tick (absolute, shared clock) — how merged
+    # multi-job runs recover each job's finish time
+    sink_finish_ticks: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def hot_switch(self) -> NodeId | None:
@@ -222,6 +235,7 @@ def simulate_timing(
     *,
     engine: str | None = None,
     spec: FlowSpec | None = None,
+    release: Mapping[str, float] | None = None,
 ) -> SimReport:
     """Stream every routed edge's packet train through the fabric model;
     returns the timing report.
@@ -230,6 +244,14 @@ def simulate_timing(
     engine, the default via ``CostModel.sim_engine``) or ``"event"``
     (per-packet event-ordered reference). ``spec`` reuses a prebuilt
     ``FlowSpec`` (``CompiledPlan.flow_spec()`` memoizes one per plan).
+
+    ``release`` maps node labels to the earliest tick they may become
+    ready: source nodes (Stores) listed here start emitting at that tick
+    instead of tick 0, which is how the p4mr scheduler models jobs
+    *arriving* at submit ticks in one shared simulation. Unlisted sources
+    release at 0; labels of non-source nodes are ignored — a node's own
+    floor is the max of its sources' release ticks, propagated down the
+    program DAG (see ``_release_floors``).
     """
     eng = engine if engine is not None else getattr(cost_model, "sim_engine", "vectorized")
     if eng not in ENGINES:
@@ -237,10 +259,32 @@ def simulate_timing(
     if spec is None:
         spec = build_flow_spec(program, routes, cost_model)
     if eng == "event":
-        return _simulate_event(program, spec, cost_model)
+        return _simulate_event(program, spec, cost_model, release=release)
     from repro.compiler.vectorized import simulate_vectorized
 
-    return simulate_vectorized(program, spec, cost_model)
+    return simulate_vectorized(program, spec, cost_model, release=release)
+
+
+def _release_floors(
+    program: dag.Program, release: Mapping[str, float] | None
+) -> Mapping[str, float]:
+    """Per-node earliest-ready floor: sources take their own release tick,
+    every other node inherits the max over its dependencies' floors.
+
+    The flow spec models same-switch in-edges as merges, not flows, so a
+    node fed only by colocated producers has no in-flows and would seed
+    at tick 0 regardless of when its upstream sources released. The
+    propagated floor restores the dependency: such a node seeds no
+    earlier than the sources it (transitively) reads."""
+    if not release:
+        return {}
+    floors: dict[str, float] = {}
+    for node in program.toposort():
+        own = float(release.get(node.name, 0.0)) if not node.deps else 0.0
+        floors[node.name] = max(
+            own, 0.0, max((floors[d] for d in node.deps), default=0.0)
+        )
+    return floors
 
 
 class _HeapScheduler:
@@ -317,13 +361,19 @@ class _Flow:
 
 
 def _simulate_event(
-    program: dag.Program, spec: FlowSpec, cost_model, *, scheduler: str = "heap"
+    program: dag.Program,
+    spec: FlowSpec,
+    cost_model,
+    *,
+    scheduler: str = "heap",
+    release: Mapping[str, float] | None = None,
 ) -> SimReport:
     """The per-packet event-ordered core (see module docstring).
 
     ``scheduler="calendar"`` swaps the global heap for the tick-bucket
     calendar — identical event order, hence bit-identical reports; the
     vectorized engine's ``fidelity="fifo"`` compatibility mode runs this.
+    ``release`` delays source readiness (see ``simulate_timing``).
     """
     cm = cost_model
     engine_label = "event" if scheduler == "heap" else "vectorized"
@@ -409,11 +459,13 @@ def _simulate_event(
             t += merges  # pragma: no cover - reduce with no routed in-edges
         node_ready(name, t)
 
-    # seed: nodes with no in-flows (Stores) are ready at tick 0, in
-    # deterministic program order
+    # seed: nodes with no in-flows (Stores, and merge-fed nodes whose
+    # in-edges are all colocated) are ready at their propagated release
+    # floor (0 unless staggered), in deterministic program order
+    rel = _release_floors(program, release)
     for name in program.nodes:
         if pending[name] == 0:
-            node_ready(name, 0.0)
+            node_ready(name, rel.get(name, 0.0))
 
     while sched:
         t, ev = sched.pop()
@@ -489,6 +541,7 @@ def _simulate_event(
         max_queue_depth={sw: int(round(v)) for sw, v in max_depth.items()},
         engine=engine_label,
         timeline=timeline,
+        sink_finish_ticks={s: int(round(ready.get(s, 0.0))) for s in sinks},
     )
 
 

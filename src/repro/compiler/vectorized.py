@@ -55,8 +55,9 @@ penalties and ``autotune`` folds into hotspot selection.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import os
-from typing import Hashable
+from typing import Hashable, Mapping
 
 import numpy as np
 
@@ -100,13 +101,29 @@ class VoqParams:
         )
 
 
-def simulate_vectorized(program, spec, cost_model, *, params: VoqParams | None = None):
-    """Run the vectorized engine over a prebuilt ``FlowSpec``."""
+def simulate_vectorized(
+    program,
+    spec,
+    cost_model,
+    *,
+    params: VoqParams | None = None,
+    release: Mapping[str, float] | None = None,
+):
+    """Run the vectorized engine over a prebuilt ``FlowSpec``.
+
+    ``release`` staggers source readiness (see
+    ``simulator.simulate_timing``): a flow whose source releases in the
+    future is parked on an arrival heap and injected when the fluid
+    clock reaches its release tick, so late-arriving jobs never occupy
+    queue or buffer state early.
+    """
     p = params if params is not None else VoqParams.from_cost_model(cost_model)
     if p.fidelity == "fifo":
         from repro.compiler.simulator import _simulate_event
 
-        return _simulate_event(program, spec, cost_model, scheduler="calendar")
+        return _simulate_event(
+            program, spec, cost_model, scheduler="calendar", release=release
+        )
     if p.fidelity != "voq":
         raise ValueError(
             f"unknown vectorized fidelity {p.fidelity!r}; one of 'voq', 'fifo'"
@@ -116,10 +133,10 @@ def simulate_vectorized(program, spec, cost_model, *, params: VoqParams | None =
             f"unknown sim_buffer_policy {p.buffer_policy!r}; "
             "one of 'backpressure', 'drop'"
         )
-    return _simulate_voq(program, spec, cost_model, p)
+    return _simulate_voq(program, spec, cost_model, p, release=release)
 
 
-def _simulate_voq(program, spec, cm, p: VoqParams):
+def _simulate_voq(program, spec, cm, p: VoqParams, release=None):
     flows = spec.flows
     # ---------------------------------------------------------- indexing --
     switches: list[NodeId] = []
@@ -238,6 +255,12 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
     arrived: dict[str, float] = {}
     ready: dict[str, float] = {}
 
+    # staggered releases: flows whose source isn't ready yet wait here as
+    # (release tick, seq, flow id) and are injected when the clock arrives
+    t = 0.0
+    arrivals: list[tuple[float, int, int]] = []
+    arr_seq = 0
+
     # ------------------------------------------------- node-level events --
     def node_ready(name: str, tt: float) -> None:
         if name in ready:  # fire-once (see the event engine's guard)
@@ -247,10 +270,16 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
             inject(fid, tt)
 
     def inject(fid: int, tt: float) -> None:
-        nonlocal n_active
+        nonlocal n_active, arr_seq
         f = flows[fid]
         if f.hops == 0:
             complete(fid, tt)
+            return
+        if tt > t + _EPS:
+            # future release: the train must not occupy queue/buffer
+            # state yet — park it until the clock reaches the tick
+            arr_seq += 1
+            heapq.heappush(arrivals, (tt, arr_seq, fid))
             return
         base = flow_base[fid]
         end = base + f.hops
@@ -312,9 +341,14 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
             tt += m  # pragma: no cover - reduce with no routed in-edges
         node_ready(name, tt)
 
+    # seed at the propagated release floor: a merge-fed node with no
+    # in-flows must still wait for its (transitive) sources' release
+    from repro.compiler.simulator import _release_floors
+
+    rel = _release_floors(program, release)
     for name in program.nodes:
         if pending.get(name, 0) == 0:
-            node_ready(name, 0.0)
+            node_ready(name, rel.get(name, 0.0))
 
     jax_step = _make_jax_step(esw, up, lvl, ns, maxlvl) if (
         p.use_jax and n and p.port_bw is None and buffer is None
@@ -325,7 +359,6 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
     # arrays, so invariants are hoisted, segment mins use one reduceat
     # over a precomputed switch-sorted order (instead of ufunc.at), and
     # every buffer/port-cap feature is gated behind a scalar flag
-    t = 0.0
     steps = 0
     max_steps = 200 * (n + 1) + 10_000
     idx = np.arange(n)
@@ -354,7 +387,16 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
         out[seg_sw] = np.minimum.reduceat(key[order], seg_starts)
         return out
 
-    while n_active:
+    while n_active or arrivals:
+        while arrivals and arrivals[0][0] <= t + _EPS:
+            tt, _, fid = heapq.heappop(arrivals)
+            inject(fid, tt)
+        if not n_active:
+            if not arrivals:  # due pops were all zero-hop completions
+                break
+            # idle fabric before the next release — jump the clock
+            t = arrivals[0][0]
+            continue
         steps += 1
         if steps > max_steps:
             raise ValueError(
@@ -513,6 +555,9 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
                 dt = min(
                     dt, float(((buffer - occ)[filling] / net_sw[filling]).min())
                 )
+        if arrivals:
+            # never step past a pending release (it re-sorts priorities)
+            dt = min(dt, max(arrivals[0][0] - t, _EPS))
         if dt == _INF:
             stuck = idx[active]
             raise ValueError(
@@ -700,6 +745,7 @@ def _simulate_voq(program, spec, cm, p: VoqParams):
         port_blocked_ticks=port_dict(blocked_p),
         dropped_packets=float(dropped),
         timeline=timeline,
+        sink_finish_ticks={s: int(round(ready.get(s, 0.0))) for s in sinks},
     )
 
 

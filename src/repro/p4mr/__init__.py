@@ -16,6 +16,11 @@ One import surfaces the whole stack:
   ``plan.run(inputs, backend="simulate" | "jax" | "reference")``; and
   ``session.simulate()`` streams *all* registered jobs' packet trains
   through the shared switches at once (multi-tenant contention).
+* **Serve** — ``Scheduler`` runs the session online: jobs arrive at
+  submit ticks, pass ``FabricBudget`` admission control, are compiled
+  against the measured pressure of resident traffic, ordered by an SLO
+  objective, and hot-swapped when queue pressure drifts. The resulting
+  schedule is never worse than the unscheduled merge.
 
     from repro import p4mr
     from repro.core.topology import TorusTopology
@@ -30,12 +35,26 @@ One import surfaces the whole stack:
     counts = plan.run(histograms, backend="simulate")   # == "jax" == "reference"
 """
 from repro.p4mr.builder import Dataset, Job, from_program, from_source, job
+from repro.p4mr.scheduler import (
+    Admission,
+    FabricBudget,
+    HotSwap,
+    JobRequest,
+    ScheduleReport,
+    Scheduler,
+)
 from repro.p4mr.session import CompileOptions, Session, SessionReport, merge_plans
 
 __all__ = [
+    "Admission",
     "CompileOptions",
     "Dataset",
+    "FabricBudget",
+    "HotSwap",
     "Job",
+    "JobRequest",
+    "ScheduleReport",
+    "Scheduler",
     "Session",
     "SessionReport",
     "from_program",

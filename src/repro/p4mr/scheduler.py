@@ -1,0 +1,600 @@
+"""Online multi-tenant scheduler over the shared fabric.
+
+``Session.simulate`` prices coexistence but does nothing about it: every
+job keeps its solo-compiled routes and merges at tick 0. This module is
+the layer that *serves a stream of jobs* — the paper's framing of
+switches as a shared parallel computing device made operational:
+
+* **arrival model** — jobs are submitted at ticks (``submit(job, at=)``)
+  and release their packet trains at those ticks in one shared
+  simulation (``simulate_timing(..., release=...)``), not all at 0;
+* **admission control** — a ``FabricBudget`` derived from the session's
+  ``CostModel`` rejects jobs whose reducer state would overflow a
+  switch's memory (``switch_memory_bytes``, via ``Placement.state_used``)
+  or whose offered load would push a switch past a utilization cap;
+* **contention-aware compilation** — each arrival is compiled twice:
+  cold (an empty fabric) and *seeded* with the measured pressure of the
+  already-admitted traffic (``telemetry.fabric.measured_switch_pressure``
+  over the merged run's ``SimReport``/``Timeline``, threaded into the
+  ``route`` / ``reroute-feedback`` passes as
+  ``switch_penalty_seed`` / ``link_penalty_seed``); whichever coexists
+  better under the objective wins;
+* **fairness / SLO objective** — ``"weighted-makespan"`` (minimize the
+  worst weighted flow time) or ``"deadline"`` (minimize weighted
+  deadline-miss ticks, EDF admission order); the objective orders
+  admissions and breaks every accept-if-better tie, so an SLO job's
+  lateness outranks a batch job's finish;
+* **session-level reroute feedback** — after admission, whole-fleet
+  reroute rounds rebuild every job's routes against the *merged*
+  measured pressure, accepted only when the objective improves;
+* **plan hot-swap** — when a job's measured per-switch pressure in the
+  merged run drifts past ``drift_threshold`` from its compile-time
+  (solo) profile, the job is retuned via ``autotune.tune`` and the new
+  plan is swapped in if the merged objective improves.
+
+Every candidate configuration is scored on the same merged simulation,
+and the all-solo configuration (the "unscheduled merge") is always in
+the candidate set — the final schedule is never worse than not
+scheduling at all.
+
+    sched = p4mr.Scheduler(sess)
+    sched.submit(job_a, name="a")                 # arrives at tick 0
+    sched.submit(job_b, name="b", at=40)          # arrives at tick 40
+    rep = sched.run()
+    rep.makespan_ticks, rep.unscheduled_makespan_ticks, rep.recovered_ticks
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Hashable, Mapping
+
+from repro.p4mr.session import CompileOptions, Session, merge_plans
+
+NodeId = Hashable
+
+OBJECTIVES = ("weighted-makespan", "deadline")
+
+
+@dataclasses.dataclass(frozen=True)
+class JobRequest:
+    """One submitted job: what arrives, when, and under which SLO."""
+
+    name: str
+    job: Any  # fluent Job, dag.Program, DSL text or JSON AST
+    submit_tick: float = 0.0
+    deadline_ticks: float | None = None  # absolute tick on the shared clock
+    weight: float = 1.0
+    pins: dict[str, NodeId] | None = None
+    options: "CompileOptions | str | None" = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """One admission decision, in the order decisions were made."""
+
+    name: str
+    admitted: bool
+    reason: str = ""  # rejection reason; empty when admitted
+    seeded: bool = False  # contention-aware compile beat the cold compile
+
+
+@dataclasses.dataclass(frozen=True)
+class HotSwap:
+    """One drift-triggered retune attempt (phase D)."""
+
+    name: str
+    drift: float  # max relative per-switch pressure drift vs solo profile
+    accepted: bool
+    makespan_before: int
+    makespan_after: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleReport:
+    """``Scheduler.run()`` result — the scheduled configuration next to
+    the unscheduled merge it must beat-or-match."""
+
+    combined: Any  # compiler.SimReport of the final merged run
+    admissions: tuple[Admission, ...]
+    arrivals: dict[str, float]  # admitted job -> submit tick
+    finish_ticks: dict[str, int]  # admitted job -> absolute finish tick
+    solo_makespan_ticks: dict[str, int]
+    makespan_ticks: int  # scheduled merged makespan
+    unscheduled_makespan_ticks: int  # all-solo-compiled merge, same arrivals
+    objective: str
+    reroute_rounds_run: int
+    reroute_accepted: int
+    hot_swaps: tuple[HotSwap, ...]
+    deadline_miss_ticks: dict[str, int]  # late jobs only
+    weighted_flow_ticks: float  # Σ weight · (finish − arrival)
+
+    @property
+    def admitted(self) -> list[str]:
+        return [a.name for a in self.admissions if a.admitted]
+
+    @property
+    def rejected(self) -> dict[str, str]:
+        return {a.name: a.reason for a in self.admissions if not a.admitted}
+
+    @property
+    def recovered_ticks(self) -> int:
+        """Contention ticks the scheduler clawed back vs the unscheduled
+        merge (>= 0 by construction)."""
+        return self.unscheduled_makespan_ticks - self.makespan_ticks
+
+    @property
+    def contention_ticks(self) -> int:
+        """Scheduled makespan beyond the ideal no-contention schedule
+        (every job finishing ``arrival + solo``)."""
+        ideal = max(
+            (
+                self.arrivals.get(n, 0.0) + mk
+                for n, mk in self.solo_makespan_ticks.items()
+            ),
+            default=0.0,
+        )
+        return self.makespan_ticks - int(round(ideal))
+
+    def summary(self) -> str:
+        """One line: admissions, makespans, recovery, swaps."""
+        parts = [
+            f"{len(self.admissions)} submitted, {len(self.admitted)} admitted; "
+            f"makespan {self.makespan_ticks}t "
+            f"(unscheduled {self.unscheduled_makespan_ticks}t, "
+            f"recovered {self.recovered_ticks}t; "
+            f"contention +{self.contention_ticks}t)"
+        ]
+        if self.reroute_rounds_run:
+            parts.append(
+                f"reroute {self.reroute_accepted}/{self.reroute_rounds_run} "
+                "round(s) accepted"
+            )
+        if self.hot_swaps:
+            n_ok = sum(1 for s in self.hot_swaps if s.accepted)
+            parts.append(f"{n_ok}/{len(self.hot_swaps)} hot-swap(s) accepted")
+        if self.deadline_miss_ticks:
+            miss = ", ".join(
+                f"{n}+{v}t" for n, v in sorted(self.deadline_miss_ticks.items())
+            )
+            parts.append(f"deadline miss {miss}")
+        return "; ".join(parts)
+
+
+class FabricBudget:
+    """Admission budget derived from the ``CostModel``.
+
+    Two resources, both per switch:
+
+    * **reducer state** — each plan's ``Placement.state_used`` (bytes of
+      Reduce state per switch) summed over resident jobs must stay under
+      ``switch_memory_bytes × memory_headroom``. This is the hard limit:
+      the §3 model gives a switch one memory, not one per tenant.
+    * **offered load** — optional (``load_cap``): the sum of resident
+      jobs' solo ``switch_utilization`` (busy ticks / makespan at the §3
+      1 pkt/tick service rate) must stay under ``load_cap``. A cap > 1
+      admits oversubscription (jobs queue), < 1 reserves headroom.
+    """
+
+    def __init__(self, cost_model, *, memory_headroom: float = 1.0,
+                 load_cap: float | None = None):
+        if memory_headroom <= 0:
+            raise ValueError(f"memory_headroom must be > 0, got {memory_headroom}")
+        if load_cap is not None and load_cap <= 0:
+            raise ValueError(f"load_cap must be > 0, got {load_cap}")
+        self.cost_model = cost_model
+        self.memory_headroom = float(memory_headroom)
+        self.load_cap = load_cap
+
+    def check(self, plan, residents: Mapping[str, Any], *,
+              engine: str | None = None) -> str | None:
+        """None when ``plan`` fits next to ``residents``; else the reason."""
+        limit = self.cost_model.switch_memory_bytes * self.memory_headroom
+        used: dict[NodeId, float] = {}
+        for pl in residents.values():
+            for sw, b in pl.placement.state_used.items():
+                used[sw] = used.get(sw, 0.0) + b
+        for sw, b in sorted(plan.placement.state_used.items(), key=lambda kv: str(kv[0])):
+            if b and used.get(sw, 0.0) + b > limit:
+                return (
+                    f"switch {sw}: reducer state {used.get(sw, 0.0) + b:.0f}B "
+                    f"would exceed the fabric budget {limit:.0f}B "
+                    f"({len(residents)} resident job(s))"
+                )
+        if self.load_cap is not None:
+            load: dict[NodeId, float] = {}
+            for pl in (*residents.values(), plan):
+                for sw, u in pl.simulate_timing(engine=engine).switch_utilization.items():
+                    load[sw] = load.get(sw, 0.0) + u
+            for sw in sorted(load, key=str):
+                if load[sw] > self.load_cap + 1e-9:
+                    return (
+                        f"switch {sw}: offered load {load[sw]:.2f} would exceed "
+                        f"the utilization cap {self.load_cap:.2f}"
+                    )
+        return None
+
+
+class Scheduler:
+    """Admit, compile and place a stream of jobs on one shared fabric.
+
+    Construct over a ``Session`` (which owns topology, ``CostModel`` and
+    default ``CompileOptions``), ``submit()`` jobs with submit ticks and
+    SLOs, then ``run()`` once: admission → contention-aware compile →
+    fleet reroute → hot-swap, returning a ``ScheduleReport``. Admitted
+    jobs' final plans are registered back into the session under their
+    scheduler names, so ``session.simulate(arrivals=rep.arrivals)``
+    reproduces the scheduled run.
+    """
+
+    def __init__(
+        self,
+        session: Session,
+        *,
+        objective: str = "weighted-makespan",
+        budget: FabricBudget | None = None,
+        memory_headroom: float = 1.0,
+        load_cap: float | None = None,
+        reroute_rounds: int = 2,
+        drift_threshold: float = 0.75,
+        retune_rounds: int = 2,
+        engine: str | None = None,
+    ):
+        if objective not in OBJECTIVES:
+            raise ValueError(
+                f"unknown objective {objective!r}; one of {OBJECTIVES}"
+            )
+        self.session = session
+        self.objective = objective
+        self.budget = budget if budget is not None else FabricBudget(
+            session.cost_model,
+            memory_headroom=memory_headroom,
+            load_cap=load_cap,
+        )
+        self.reroute_rounds = int(reroute_rounds)
+        self.drift_threshold = float(drift_threshold)
+        self.retune_rounds = int(retune_rounds)
+        self.engine = engine
+        self.requests: list[JobRequest] = []
+
+    # ------------------------------------------------------------ submit --
+    def submit(
+        self,
+        job,
+        *,
+        at: float = 0.0,
+        name: str | None = None,
+        deadline: float | None = None,
+        weight: float = 1.0,
+        pins: dict[str, NodeId] | None = None,
+        options: "CompileOptions | str | None" = None,
+    ) -> str:
+        """Queue one job for the next ``run()``.
+
+        ``at`` is the submit tick (sources release then); ``deadline`` is
+        an absolute tick on the shared clock; ``weight`` scales the job
+        in the fairness objective. Job names must be unique per
+        scheduler — the name keys arrivals, finish times and the session
+        registry. Returns the name.
+        """
+        from repro.p4mr.builder import Job
+
+        if at < 0:
+            raise ValueError(f"submit tick must be >= 0, got {at}")
+        if weight <= 0:
+            raise ValueError(f"weight must be > 0, got {weight}")
+        if deadline is not None and deadline <= at:
+            raise ValueError(
+                f"deadline {deadline} is not after the submit tick {at}"
+            )
+        if name is None:
+            name = job.name if isinstance(job, Job) else f"job{len(self.requests)}"
+        if any(r.name == name for r in self.requests):
+            raise ValueError(
+                f"duplicate job name {name!r}; scheduler names must be unique"
+            )
+        self.requests.append(
+            JobRequest(
+                name=name, job=job, submit_tick=float(at),
+                deadline_ticks=None if deadline is None else float(deadline),
+                weight=float(weight), pins=pins, options=options,
+            )
+        )
+        return name
+
+    # ----------------------------------------------------------- scoring --
+    def _admission_key(self, req: JobRequest):
+        # arrival order first (online), then the objective: EDF for
+        # "deadline" (no-deadline jobs last), heaviest-first otherwise
+        dl = req.deadline_ticks if req.deadline_ticks is not None else float("inf")
+        if self.objective == "deadline":
+            return (req.submit_tick, dl, -req.weight, req.name)
+        return (req.submit_tick, -req.weight, dl, req.name)
+
+    def _score(self, finish: Mapping[str, float], arrivals: Mapping[str, float],
+               by_name: Mapping[str, JobRequest]) -> tuple:
+        """Lexicographic objective: (weighted deadline miss, primary,
+        makespan, weighted flow). Lower is better; strict tuple-compare
+        accept-if-better keeps every phase never-worse."""
+        miss = wflow = wmax = 0.0
+        for name, f in finish.items():
+            req = by_name[name]
+            flow = f - arrivals.get(name, 0.0)
+            wflow += req.weight * flow
+            wmax = max(wmax, req.weight * flow)
+            if req.deadline_ticks is not None and f > req.deadline_ticks:
+                miss += req.weight * (f - req.deadline_ticks)
+        makespan = max(finish.values(), default=0.0)
+        primary = 0.0 if self.objective == "deadline" else wmax
+        return (round(miss, 6), round(primary, 6), round(makespan, 6),
+                round(wflow, 6))
+
+    # -------------------------------------------------------- internals --
+    def _compile(self, req: JobRequest, *, sw_seed=None, ln_seed=None):
+        """Compile one request without touching the session registry;
+        seeds (if any) ride the driver options into route passes."""
+        from repro import compiler
+
+        opts = (
+            CompileOptions.of(req.options)
+            if req.options is not None
+            else self.session.options
+        )
+        dopts = opts.driver_options()
+        if sw_seed:
+            dopts["switch_penalty_seed"] = dict(sw_seed)
+        if ln_seed:
+            dopts["link_penalty_seed"] = dict(ln_seed)
+        src, _ = self.session._resolve(req.job)
+        return compiler.compile(
+            src,
+            self.session.topology,
+            passes=opts.pass_list(),
+            cost_model=self.session.cost_model,
+            pins=req.pins,
+            options=dopts,
+        )
+
+    def _merged(self, plans: Mapping[str, Any], arrivals: Mapping[str, float],
+                engine: str | None, *, telemetry: bool = False):
+        """One shared simulation of ``plans`` under staggered release.
+        ``telemetry=True`` forces fabric telemetry on (a profiling run),
+        so ``measured_switch_pressure`` sees the depth-integral signal
+        even when the session's cost model leaves it off."""
+        from repro.compiler.simulator import simulate_timing
+
+        cm = self.session.cost_model
+        if telemetry and not getattr(cm, "sim_telemetry", False):
+            cm = dataclasses.replace(cm, sim_telemetry=True)
+        program, routes = merge_plans(plans)
+        release = {
+            f"{name}/{node}": tick
+            for name, tick in arrivals.items()
+            if tick > 0
+            for node in plans[name].program.nodes
+        }
+        return simulate_timing(
+            program, routes, cm, engine=engine, release=release or None
+        )
+
+    def _finish_of(self, rep, plans: Mapping[str, Any]) -> dict[str, float]:
+        return {
+            name: float(
+                max(
+                    (
+                        rep.sink_finish_ticks.get(f"{name}/{s}", 0)
+                        for s in pl.flow_spec().sinks
+                    ),
+                    default=rep.makespan_ticks,
+                )
+            )
+            for name, pl in plans.items()
+        }
+
+    def _config_score(self, plans, arrivals, by_name, engine):
+        rep = self._merged(plans, arrivals, engine)
+        return self._score(self._finish_of(rep, plans), arrivals, by_name), rep
+
+    # --------------------------------------------------------------- run --
+    def run(self, *, engine: str | None = None) -> ScheduleReport:
+        """Serve every submitted job: admission in objective order with
+        contention-aware compilation, fleet-level reroute feedback, and
+        drift-triggered hot-swap. See the module docstring for phases."""
+        from repro import autotune
+        from repro.core.routing import build_routes
+        from repro.telemetry.fabric import (
+            link_pressure,
+            measured_switch_pressure,
+            normalized,
+            switch_pressure,
+        )
+
+        if not self.requests:
+            raise ValueError("scheduler has no submitted jobs (call submit first)")
+        eng = engine if engine is not None else self.engine
+        sess = self.session
+        cm = sess.cost_model
+        order = sorted(self.requests, key=self._admission_key)
+        by_name = {r.name: r for r in order}
+
+        with sess._scope("session.schedule", jobs=len(order)) as scope_attrs:
+            # ---- phase A: online admission + contention-aware compile
+            admissions: list[Admission] = []
+            plans: dict[str, Any] = {}  # scheduled configuration
+            cold_plans: dict[str, Any] = {}  # the unscheduled merge
+            arrivals: dict[str, float] = {}
+            for req in order:
+                cold = self._compile(req)
+                candidate, seeded = cold, False
+                if plans:
+                    prof = self._merged(plans, arrivals, eng, telemetry=True)
+                    sw_seed = measured_switch_pressure(prof)
+                    ln_seed = link_pressure(prof)
+                    if sw_seed or ln_seed:
+                        hot = self._compile(req, sw_seed=sw_seed, ln_seed=ln_seed)
+                        trial = dict(arrivals)
+                        trial[req.name] = req.submit_tick
+                        s_cold, _ = self._config_score(
+                            {**plans, req.name: cold}, trial, by_name, eng
+                        )
+                        s_hot, _ = self._config_score(
+                            {**plans, req.name: hot}, trial, by_name, eng
+                        )
+                        # ties go to the seeded plan: same score now, but
+                        # it keeps clear of measured pressure, which is
+                        # headroom for arrivals not yet seen
+                        if s_hot <= s_cold:
+                            candidate, seeded = hot, True
+                reason = self.budget.check(candidate, plans, engine=eng)
+                if reason is not None and seeded:
+                    # the seeded compile may have placed state differently;
+                    # give the cold plan its own chance before rejecting
+                    candidate, seeded = cold, False
+                    reason = self.budget.check(candidate, plans, engine=eng)
+                if reason is not None:
+                    admissions.append(Admission(req.name, False, reason))
+                    continue
+                plans[req.name] = candidate
+                cold_plans[req.name] = cold
+                arrivals[req.name] = req.submit_tick
+                admissions.append(Admission(req.name, True, seeded=seeded))
+
+            if not plans:
+                detail = "; ".join(f"{a.name}: {a.reason}" for a in admissions)
+                raise ValueError(f"no jobs admitted — {detail}")
+
+            # ---- phase B: the unscheduled merge is always a candidate,
+            # so the schedule can't lose to not scheduling at all
+            unsched_rep = self._merged(cold_plans, arrivals, eng)
+            unsched_score = self._score(
+                self._finish_of(unsched_rep, cold_plans), arrivals, by_name
+            )
+            if any(plans[n] is not cold_plans[n] for n in plans):
+                best_score, best_rep = self._config_score(
+                    plans, arrivals, by_name, eng
+                )
+                if unsched_score < best_score:
+                    plans = dict(cold_plans)
+                    best_score, best_rep = unsched_score, unsched_rep
+            else:
+                best_score, best_rep = unsched_score, unsched_rep
+
+            # ---- phase C: fleet-level reroute feedback over merged traffic
+            rounds_run = accepted = 0
+            for _ in range(max(0, self.reroute_rounds)):
+                prof = self._merged(plans, arrivals, eng, telemetry=True)
+                sw_pen = normalized(measured_switch_pressure(prof))
+                ln_pen = normalized(link_pressure(prof))
+                nxt: dict[str, Any] = {}
+                changed = False
+                for name, pl in plans.items():
+                    weights = {
+                        lbl: float(t.packets)
+                        for lbl, t in cm.traffic(pl.program).items()
+                    }
+                    routes = build_routes(
+                        pl.program, sess.topology, pl.placement,
+                        edge_weight=weights,
+                        switch_penalty=sw_pen, link_penalty=ln_pen,
+                    )
+                    if [r.path for r in routes.routes] != [
+                        r.path for r in pl.routes.routes
+                    ]:
+                        changed = True
+                        nxt[name] = dataclasses.replace(
+                            pl,
+                            routes=routes,
+                            cost=cm.plan_cost(
+                                pl.program, sess.topology, pl.placement, routes
+                            ),
+                        )
+                    else:
+                        nxt[name] = pl
+                rounds_run += 1
+                if not changed:
+                    break  # routing fixed point
+                score, rep = self._config_score(nxt, arrivals, by_name, eng)
+                if score < best_score:
+                    plans, best_score, best_rep = nxt, score, rep
+                    accepted += 1
+                else:
+                    break
+
+            # ---- phase D: pressure-drift hot-swap via autotune
+            swaps: list[HotSwap] = []
+            if self.retune_rounds > 0:
+                merged_pressure = switch_pressure(best_rep)
+                for req in order:
+                    name = req.name
+                    pl = plans.get(name)
+                    if pl is None:
+                        continue
+                    profile = switch_pressure(pl.simulate_timing(engine=eng))
+                    on_route = {
+                        sw for r in pl.routes.routes for sw in r.path
+                    }
+                    drift = max(
+                        (
+                            (merged_pressure.get(sw, 0.0) - profile.get(sw, 0.0))
+                            / (profile.get(sw, 0.0) + 1.0)
+                            for sw in on_route
+                        ),
+                        default=0.0,
+                    )
+                    if drift <= self.drift_threshold:
+                        continue
+                    tuned = autotune.tune(pl, rounds=self.retune_rounds)
+                    score, rep = self._config_score(
+                        {**plans, name: tuned}, arrivals, by_name, eng
+                    )
+                    ok = score < best_score
+                    swaps.append(
+                        HotSwap(
+                            name=name,
+                            drift=round(drift, 3),
+                            accepted=ok,
+                            makespan_before=best_rep.makespan_ticks,
+                            makespan_after=rep.makespan_ticks,
+                        )
+                    )
+                    if ok:
+                        plans[name] = tuned
+                        best_score, best_rep = score, rep
+
+            scope_attrs["makespan_ticks"] = best_rep.makespan_ticks
+            scope_attrs["admitted"] = len(plans)
+
+        # register the final configuration so the session reproduces it
+        solo: dict[str, int] = {}
+        for name, pl in plans.items():
+            sess.plans[name] = pl
+            solo[name] = pl.simulate_timing(engine=eng).makespan_ticks
+            if sess.telemetry is not None:
+                sess.telemetry.record_compile(pl, name=name)
+        if sess.telemetry is not None:
+            sess.telemetry.record_simulation(best_rep, label="scheduled")
+
+        finish = self._finish_of(best_rep, plans)
+        miss = {
+            n: int(round(finish[n] - by_name[n].deadline_ticks))
+            for n in finish
+            if by_name[n].deadline_ticks is not None
+            and finish[n] > by_name[n].deadline_ticks
+        }
+        wflow = sum(
+            by_name[n].weight * (finish[n] - arrivals.get(n, 0.0)) for n in finish
+        )
+        return ScheduleReport(
+            combined=best_rep,
+            admissions=tuple(admissions),
+            arrivals=dict(arrivals),
+            finish_ticks={n: int(round(v)) for n, v in finish.items()},
+            solo_makespan_ticks=solo,
+            makespan_ticks=best_rep.makespan_ticks,
+            unscheduled_makespan_ticks=unsched_rep.makespan_ticks,
+            objective=self.objective,
+            reroute_rounds_run=rounds_run,
+            reroute_accepted=accepted,
+            hot_swaps=tuple(swaps),
+            deadline_miss_ticks=miss,
+            weighted_flow_ticks=round(wflow, 3),
+        )

@@ -81,9 +81,13 @@ class CompileOptions:
         )
 
     def pass_list(self) -> tuple:
+        """The compiler pass tuple these options select: explicit
+        ``passes`` verbatim, otherwise the ``preset``'s pipeline."""
         return self.passes if self.passes is not None else _preset_passes()[self.preset]
 
     def driver_options(self) -> dict[str, Any]:
+        """Flatten the typed knobs (+``extra``) into the plain options
+        dict ``compiler.compile`` passes to its passes."""
         out = dict(self.extra)
         if self.reroute_rounds is not None:
             out["reroute_rounds"] = self.reroute_rounds
@@ -99,30 +103,51 @@ class SessionReport:
     """``Session.simulate()`` result: the shared-fabric streamed timing
     (``combined``) next to each job's solo timing (``solo``) — the gap is
     multi-tenant contention. ``outputs`` carries per-job functional
-    results when inputs were supplied."""
+    results when inputs were supplied. Under staggered submission
+    (``simulate(arrivals=...)``), ``arrivals`` records each job's submit
+    tick and ``finish_ticks`` its absolute completion tick on the shared
+    clock (from the merged run's per-sink finish times)."""
 
     combined: Any  # compiler.SimReport over the merged traffic
     solo: dict[str, Any]  # job name -> its plan's own SimReport
     outputs: dict[str, dict] | None = None
+    arrivals: dict[str, float] = dataclasses.field(default_factory=dict)
+    finish_ticks: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def solo_makespan_ticks(self) -> dict[str, int]:
+        """Each job's makespan running alone on an idle fabric."""
         return {name: rep.makespan_ticks for name, rep in self.solo.items()}
 
     @property
     def contention_ticks(self) -> int:
-        """Combined makespan beyond the slowest job alone (>= 0): what
-        sharing the fabric cost the last finisher."""
-        slowest = max((r.makespan_ticks for r in self.solo.values()), default=0)
-        return self.combined.makespan_ticks - slowest
+        """Combined makespan beyond the ideal no-contention schedule
+        (each job finishing ``arrival + solo makespan``): what sharing
+        the fabric cost the last finisher. >= 0 when every job keeps its
+        solo routes; a scheduler that re-routes jobs *for* coexistence
+        can drive it down but never below 0."""
+        ideal = max(
+            (
+                self.arrivals.get(name, 0.0) + rep.makespan_ticks
+                for name, rep in self.solo.items()
+            ),
+            default=0.0,
+        )
+        return self.combined.makespan_ticks - int(round(ideal))
 
     def summary(self) -> str:
+        """One line: combined vs per-job solo makespans + contention."""
         solo = ", ".join(
             f"{name}={rep.makespan_ticks}t" for name, rep in self.solo.items()
         )
+        when = ""
+        if any(self.arrivals.values()):
+            when = " arrivals " + ", ".join(
+                f"{name}@{int(t)}" for name, t in sorted(self.arrivals.items())
+            ) + ";"
         return (
             f"{len(self.solo)} job(s): combined {self.combined.makespan_ticks}t "
-            f"(solo {solo}; contention +{self.contention_ticks}t)"
+            f"(solo {solo};{when} contention +{self.contention_ticks}t)"
         )
 
 
@@ -150,9 +175,22 @@ def merge_plans(plans: Mapping[str, Any]) -> tuple[dag.Program, Any]:
     from repro.core.routing import RoutingTable
 
     nodes, routes = [], []
+    seen: dict[str, str] = {}  # merged label -> owning job
     for name, plan in plans.items():
         for n in plan.program:
-            nodes.append(_prefix_node(n, name))
+            pn = _prefix_node(n, name)
+            other = seen.get(pn.name)
+            if other is not None:
+                # "/" nests: job 'a' with node 'b/c' and job 'a/b' with
+                # node 'c' both map to 'a/b/c' — catch it here with the
+                # job names, not deep inside Program validation
+                raise ValueError(
+                    f"merged label {pn.name!r} is claimed by both job "
+                    f"{other!r} and job {name!r}; rename one job so the "
+                    "prefixed label spaces stay disjoint"
+                )
+            seen[pn.name] = name
+            nodes.append(pn)
         for r in plan.routes.routes:
             routes.append(
                 dataclasses.replace(
@@ -357,13 +395,18 @@ class Session:
         *,
         names: Sequence[str] | None = None,
         engine: str | None = None,
+        arrivals: Mapping[str, float] | None = None,
     ) -> SessionReport:
         """Stream every registered job's packet trains through the shared
         fabric at once (the multi-tenant switch story).
 
-        All jobs inject at tick 0; their trains contend in the same
-        switch queues, so the ``combined`` makespan is never below any
-        job's ``solo`` makespan — queues only add delay. ``inputs``
+        By default all jobs inject at tick 0; their trains contend in
+        the same switch queues, so the ``combined`` makespan is never
+        below any job's ``solo`` makespan — queues only add delay.
+        ``arrivals`` maps job name → submit tick: that job's sources
+        release at the given tick instead of 0 (unknown names raise;
+        unlisted jobs arrive at 0), which is how staggered multi-tenant
+        load is expressed — the p4mr scheduler drives this. ``inputs``
         optionally maps job name → per-Store input arrays for functional
         outputs; ``names`` restricts which jobs share the run. ``engine``
         picks the simulator core ("event" | "vectorized") for both the
@@ -382,10 +425,40 @@ class Session:
             picked = {n: self.plans[n] for n in names}
         if not picked:
             raise ValueError("session has no compiled jobs to simulate")
+        arr = {n: 0.0 for n in picked}
+        if arrivals:
+            unknown = [n for n in arrivals if n not in picked]
+            if unknown:
+                raise KeyError(
+                    f"arrivals for unknown job(s) {unknown}; have {sorted(picked)}"
+                )
+            for n, tick in arrivals.items():
+                if tick < 0:
+                    raise ValueError(f"arrival tick for job {n!r} is negative: {tick}")
+                arr[n] = float(tick)
         with self._scope("session.simulate", jobs=len(picked)) as scope_attrs:
             program, routes = merge_plans(picked)
-            combined = simulate_timing(program, routes, self.cost_model, engine=engine)
+            release = {
+                f"{name}/{node}": tick
+                for name, tick in arr.items()
+                if tick > 0
+                for node in picked[name].program.nodes
+            }
+            combined = simulate_timing(
+                program, routes, self.cost_model, engine=engine,
+                release=release or None,
+            )
             solo = {n: pl.simulate_timing(engine=engine) for n, pl in picked.items()}
+            finish = {
+                name: max(
+                    (
+                        combined.sink_finish_ticks.get(f"{name}/{s}", 0)
+                        for s in pl.flow_spec().sinks
+                    ),
+                    default=combined.makespan_ticks,
+                )
+                for name, pl in picked.items()
+            }
             outputs = None
             if inputs is not None:
                 unknown = [n for n in inputs if n not in picked]
@@ -397,4 +470,7 @@ class Session:
             scope_attrs["makespan_ticks"] = combined.makespan_ticks
         if self.telemetry is not None:
             self.telemetry.record_simulation(combined, label="combined")
-        return SessionReport(combined=combined, solo=solo, outputs=outputs)
+        return SessionReport(
+            combined=combined, solo=solo, outputs=outputs,
+            arrivals=arr, finish_ticks=finish,
+        )

@@ -36,10 +36,12 @@ from repro.telemetry.fabric import (
     VoqCollector,
     hottest,
     link_pressure,
+    measured_switch_pressure,
     normalized,
     rank_cold,
     rank_hot,
     switch_pressure,
+    timeline_pressure,
 )
 from repro.telemetry.metrics import MetricsRegistry
 from repro.telemetry.trace import (
@@ -82,6 +84,9 @@ class Telemetry:
         )
 
     def activate(self):
+        """Context manager making ``self.tracer`` the ambient tracer for
+        the block (``trace.activate``), so instrumented call sites land
+        their spans here."""
         return activate(self.tracer)
 
     # ------------------------------------------------------------ feeding --
@@ -125,9 +130,13 @@ class Telemetry:
 
     # ------------------------------------------------------------- export --
     def write_trace(self, path: str) -> None:
+        """Write the collected spans as Chrome trace-event JSON (load in
+        Perfetto or ``chrome://tracing``)."""
         self.tracer.write(path)
 
     def write_metrics(self, path: str) -> None:
+        """Write the metrics registry as JSON for the
+        ``python -m repro.telemetry.report`` dashboard."""
         self.metrics.write(path)
 
 
@@ -145,9 +154,11 @@ __all__ = [
     "hottest",
     "link_pressure",
     "maybe_span",
+    "measured_switch_pressure",
     "normalized",
     "rank_cold",
     "rank_hot",
     "switch_pressure",
+    "timeline_pressure",
     "validate_chrome_trace",
 ]

@@ -103,9 +103,11 @@ class Timeline:
         return out
 
     def final_drops(self) -> dict[Port, float]:
+        """Cumulative dropped packets per port at end of run (>0 only)."""
         return {p: s[-1] for p, s in self.port_cum_drops.items() if s and s[-1] > 0}
 
     def final_blocked(self) -> dict[Port, float]:
+        """Cumulative backpressure-blocked ticks per port (>0 only)."""
         return {p: s[-1] for p, s in self.port_cum_blocked.items() if s and s[-1] > 0}
 
     def to_dict(self) -> dict:
@@ -164,6 +166,9 @@ class EventCollector:
         self._hops: dict[tuple, list] = {}
 
     def advance(self, t: float, next_free: Mapping[NodeId, float]) -> None:
+        """Emit per-switch queue-depth samples for every interval
+        boundary at or before ``t`` (depth = each switch's backlog,
+        ``next_free − sample tick``)."""
         while self._next <= t + _EPS:
             ts = self._next
             self._rows.append(
@@ -176,6 +181,9 @@ class EventCollector:
         self, key: tuple, src: str, dst: str, hop: int, sw: NodeId, port: Port,
         packets: float, t: float, done: float, depth: float,
     ) -> None:
+        """Record one switch service: accumulates the flow-hop's packet
+        count, first-start/last-done ticks and max queue depth seen —
+        the raw material ``finish`` turns into ``HopRecord``s."""
         self.port_packets[port] = self.port_packets.get(port, 0.0) + packets
         rec = self._hops.get(key)
         if rec is None:
@@ -187,6 +195,8 @@ class EventCollector:
             rec[8] = max(rec[8], depth)
 
     def finish(self, makespan: float, engine: str) -> Timeline:
+        """Assemble the accumulated samples + hop records into the
+        immutable ``Timeline`` attached to ``SimReport.timeline``."""
         switches = sorted({sw for row in self._rows for sw in row}, key=str)
         total = makespan if makespan > 0 else 1.0
         return Timeline(
@@ -244,6 +254,10 @@ class VoqCollector:
         qeff0: np.ndarray, qeff1: np.ndarray,
         drops_p: np.ndarray, blocked_p: np.ndarray,
     ) -> None:
+        """Emit samples for every interval boundary inside the closed-form
+        step ``[t, t+dt)``: queue depths are interpolated linearly between
+        the step's start/end vectors (the fluid core's state is exactly
+        linear within a step), drop/blocked counters are carried as-is."""
         sw0 = np.bincount(self._esw, weights=q0, minlength=self._ns)
         sw1 = np.bincount(self._esw, weights=q1, minlength=self._ns)
         p0 = np.bincount(self._pid, weights=qeff0, minlength=self._nport)
@@ -266,6 +280,8 @@ class VoqCollector:
         hop_meta: Sequence[tuple],
         first_t: np.ndarray, done_t: np.ndarray, maxq: np.ndarray,
     ) -> Timeline:
+        """Assemble the sampled series + per-entry aggregates into the
+        same ``Timeline`` shape the event engine's collector produces."""
         ns, nport = self._ns, self._nport
         sw_mat = np.asarray(self._sw_rows) if self._sw_rows else np.zeros((0, ns))
         p_mat = np.asarray(self._port_rows) if self._port_rows else np.zeros((0, nport))
@@ -342,6 +358,36 @@ def link_pressure(report) -> dict[Port, float]:
     for signal in (report.voq_depth, report.port_drops, report.port_blocked_ticks):
         for link, v in signal.items():
             out[link] = out.get(link, 0.0) + float(v)
+    return out
+
+
+def timeline_pressure(timeline) -> dict[NodeId, float]:
+    """Per-switch queue-depth integral (packet-ticks) from a sampled
+    ``Timeline`` — the *time-weighted* contention signal: a switch that
+    held a deep backlog for long reads hotter than one that spiked
+    briefly, which ``switch_pressure``'s event counts cannot tell apart.
+    Empty when ``timeline`` is None (telemetry was off) or has no
+    samples."""
+    if timeline is None or not getattr(timeline, "ticks", ()):
+        return {}
+    out: dict[NodeId, float] = {}
+    for sw, series in timeline.switch_depth.items():
+        v = float(sum(series)) * timeline.interval_ticks
+        if v > _EPS:
+            out[sw] = v
+    return out
+
+
+def measured_switch_pressure(report) -> dict[NodeId, float]:
+    """``switch_pressure`` folded with the run's ``Timeline`` depth
+    integral when fabric telemetry was on — the richest per-switch
+    contention estimate one report offers, and the seed the p4mr
+    scheduler feeds into the next tenant's contention-aware compile.
+    Degrades gracefully to plain ``switch_pressure`` when the report has
+    no timeline."""
+    out = switch_pressure(report)
+    for sw, v in timeline_pressure(getattr(report, "timeline", None)).items():
+        out[sw] = out.get(sw, 0.0) + v
     return out
 
 

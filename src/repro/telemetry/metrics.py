@@ -122,22 +122,29 @@ class MetricsRegistry:
         self.tables: dict[str, Table] = {}
 
     def counter(self, name: str) -> Counter:
+        """Get-or-create the named monotonically increasing counter."""
         return self.counters.setdefault(name, Counter(name))
 
     def gauge(self, name: str) -> Gauge:
+        """Get-or-create the named last-value gauge."""
         return self.gauges.setdefault(name, Gauge(name))
 
     def histogram(self, name: str) -> Histogram:
+        """Get-or-create the named histogram (count/total/min/max/mean)."""
         return self.histograms.setdefault(name, Histogram(name))
 
     def series(self, name: str) -> Series:
+        """Get-or-create the named (x, y) sample series."""
         return self.series_.setdefault(name, Series(name))
 
     def table(self, name: str) -> Table:
+        """Get-or-create the named row table (list-of-dicts)."""
         return self.tables.setdefault(name, Table(name))
 
     # ------------------------------------------------------------- export --
     def to_dict(self) -> dict:
+        """JSON-able dump of every instrument, keys sorted — the shape
+        the report CLI dashboard consumes."""
         return {
             "counters": {k: c.value for k, c in sorted(self.counters.items())},
             "gauges": {k: g.value for k, g in sorted(self.gauges.items())},
@@ -158,6 +165,7 @@ class MetricsRegistry:
         }
 
     def write(self, path: str) -> None:
+        """Write ``to_dict()`` as JSON for ``python -m repro.telemetry.report``."""
         with open(path, "w") as f:
             json.dump(self.to_dict(), f, indent=1)
 

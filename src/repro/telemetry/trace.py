@@ -65,6 +65,8 @@ class Tracer:
 
     @contextlib.contextmanager
     def span(self, name: str, **attrs: Any) -> Iterator[dict[str, Any]]:
+        """Time the ``with`` block as one span. Yields the span's mutable
+        attrs dict; mutations made inside the block are recorded."""
         start = self._now_us()
         frame = dict(attrs)
         try:
@@ -107,6 +109,7 @@ class Tracer:
         return {"traceEvents": events, "displayTimeUnit": "ms"}
 
     def write(self, path: str) -> None:
+        """Write ``to_chrome_trace()`` as JSON at ``path``."""
         with open(path, "w") as f:
             json.dump(self.to_chrome_trace(), f, indent=1)
 

@@ -1,0 +1,72 @@
+"""The bench-smoke regression gate: coverage failures in both directions."""
+import pytest
+
+from benchmarks.check_regression import check, main
+
+
+def _rec(name: str, makespan: float) -> dict:
+    return {"name": name, "makespan_ticks": makespan}
+
+
+def test_gate_passes_within_tolerance():
+    assert check([_rec("a", 100)], [_rec("a", 105)], 0.10) == []
+
+
+def test_gate_fails_on_regression():
+    errors = check([_rec("a", 100)], [_rec("a", 120)], 0.10)
+    assert len(errors) == 1 and "regressed" in errors[0]
+
+
+def test_baseline_cell_missing_from_current_fails():
+    errors = check([_rec("a", 100), _rec("b", 50)], [_rec("a", 100)], 0.10)
+    assert any("missing from current run" in e for e in errors)
+
+
+def test_current_cell_missing_from_baseline_fails():
+    """A cell present in the candidate but absent from the baseline is an
+    ungated measurement masquerading as green — it must fail loudly."""
+    errors = check([_rec("a", 100)], [_rec("a", 100), _rec("new", 7)], 0.10)
+    assert len(errors) == 1
+    assert "name=new" in errors[0]
+    assert "NOT gated" in errors[0]
+    assert "--allow-new" in errors[0]
+
+
+def test_allow_new_accepts_unbaselined_cell(capsys):
+    errors = check([_rec("a", 100)], [_rec("a", 100), _rec("new", 7)], 0.10,
+                   allow_new=True)
+    assert errors == []
+    assert "no baseline yet" in capsys.readouterr().out
+
+
+def test_main_flags_thread_through(tmp_path, capsys):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    base.write_text('[{"name": "a", "makespan_ticks": 100}]')
+    cur.write_text('[{"name": "a", "makespan_ticks": 100},'
+                   ' {"name": "new", "makespan_ticks": 7}]')
+    args = ["--baseline", str(base), "--current", str(cur), "--tolerance", "0.10"]
+    assert main(args) == 1
+    assert "missing from the baseline" in capsys.readouterr().out
+    assert main([*args, "--allow-new"]) == 0
+
+
+def test_no_comparable_metrics_is_an_error():
+    errors = check([{"name": "a", "compile_us": 5}],
+                   [{"name": "a", "compile_us": 9}], 0.10)
+    assert errors == ["no comparable metrics found between baseline and current"]
+
+
+def test_scheduler_metrics_are_gated():
+    base = [{"name": "s", "makespan_ticks_scheduled": 100,
+             "makespan_ticks_unscheduled": 120, "weighted_flow_ticks": 150.0}]
+    cur = [{"name": "s", "makespan_ticks_scheduled": 130,
+            "makespan_ticks_unscheduled": 120, "weighted_flow_ticks": 150.0}]
+    errors = check(base, cur, 0.10)
+    assert len(errors) == 1 and "makespan_ticks_scheduled" in errors[0]
+
+
+@pytest.mark.parametrize("metric", ["compile_us", "simulate_us", "schedule_us"])
+def test_wall_clock_fields_never_gated(metric):
+    base = [{"name": "a", "makespan_ticks": 100, metric: 10}]
+    cur = [{"name": "a", "makespan_ticks": 100, metric: 10_000}]
+    assert check(base, cur, 0.10) == []

@@ -306,6 +306,26 @@ def test_merge_plans_preserves_per_job_structure():
     assert {n.name.split("/", 1)[0] for n in program} == {"a", "b"}
 
 
+def test_merge_plans_rejects_label_prefix_collision():
+    """"/" nests: job 'a' with node 'b/R' and job 'a/b' with node 'R'
+    both claim merged label 'a/b/R' — merge_plans must name the clash
+    instead of letting Program validation fail cryptically."""
+    sess = p4mr.Session(topology.fat_tree_topology(4))
+
+    def tenant(name, hosts, sink, rlabel):
+        job = p4mr.job(name)
+        keyed = [job.store(f"s{i}", host=h, items=16).key_by(4)
+                 for i, h in enumerate(hosts)]
+        keyed[0].reduce("SUM", *keyed[1:], label=rlabel).collect(
+            sink, label=f"{rlabel}_out")
+        return job
+
+    pa = sess.compile(tenant("a", [f"h{i}" for i in range(4)], "h15", "b/R"))
+    pb = sess.compile(tenant("a/b", [f"h{i}" for i in range(4, 8)], "h12", "R"))
+    with pytest.raises(ValueError, match="claimed by both job 'a' and job 'a/b'"):
+        p4mr.merge_plans({"a": pa, "a/b": pb})
+
+
 # ------------------------------------------------------------ deprecations --
 def test_legacy_shims_emit_deprecation_warnings():
     with pytest.warns(DeprecationWarning, match="p4mr"):
