@@ -41,6 +41,10 @@ GATED_METRICS = (
     "makespan_ticks_feedback",
     "makespan_ticks_scheduled",
     "makespan_ticks_unscheduled",
+    "makespan_ticks_monitored",
+    "makespan_ticks_threshold_only",
+    "detection_latency_ticks_mean",
+    "detection_latency_ticks_max",
     "queue_delay_ticks",
     "queue_delay_ticks_static",
     "weighted_flow_ticks",
@@ -74,13 +78,21 @@ def check(
     tolerance: float,
     *,
     allow_new: bool = False,
+    higher_tolerance: float | None = None,
 ) -> list[str]:
     """Compare ``current`` records against ``baseline``; returns the list
     of failure messages (empty = gate passes).
 
     A current record with no baseline counterpart is an error unless
     ``allow_new`` — a cell the gate silently skips would read as green
-    while measuring nothing."""
+    while measuring nothing.
+
+    ``higher_tolerance`` (default: ``tolerance``) applies to the
+    HIGHER_IS_BETTER metrics only — wall-clock *ratios* are noisier than
+    deterministic tick counts, so a caller can keep tick metrics tight
+    while giving the speedup gate slack on shared runners."""
+    if higher_tolerance is None:
+        higher_tolerance = tolerance
     cur_by_key = {record_key(r): r for r in current}
     errors: list[str] = []
     compared = 0
@@ -120,11 +132,11 @@ def check(
                 continue
             b, c = float(base[metric]), float(cur[metric])
             compared += 1
-            if c < b * (1.0 - tolerance):
+            if c < b * (1.0 - higher_tolerance):
                 errors.append(
                     f"cell [{label}] metric {metric}: regressed {b:g} -> {c:g} "
                     f"({100.0 * (c - b) / max(b, 1e-12):.1f}%, tolerance "
-                    f"-{100.0 * tolerance:.0f}%)"
+                    f"-{100.0 * higher_tolerance:.0f}%)"
                 )
     if compared == 0:
         errors.append("no comparable metrics found between baseline and current")
@@ -140,6 +152,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--allow-new", action="store_true",
                     help="accept current cells that have no baseline yet "
                          "(default: fail — an ungated cell reads as green)")
+    ap.add_argument("--higher-tolerance", type=float, default=None,
+                    help="separate tolerance for higher-is-better "
+                         "(wall-clock ratio) metrics; default: --tolerance")
     args = ap.parse_args(argv)
     # provenance records (who/when/where the numbers were generated) are
     # metadata, never gated — strip them before comparing
@@ -147,7 +162,8 @@ def main(argv: list[str] | None = None) -> int:
         _, baseline = strip_provenance(json.load(f))
     with open(args.current) as f:
         _, current = strip_provenance(json.load(f))
-    errors = check(baseline, current, args.tolerance, allow_new=args.allow_new)
+    errors = check(baseline, current, args.tolerance, allow_new=args.allow_new,
+                   higher_tolerance=args.higher_tolerance)
     if errors:
         print(f"FAIL: {len(errors)} regression(s) beyond {100 * args.tolerance:.0f}%:")
         for e in errors:

@@ -7,10 +7,10 @@ Two checks over the committed documentation:
    ``http(s)://`` links and pure ``#anchor`` links are skipped; a
    ``path#anchor`` suffix is stripped before resolving).
 2. **snippet smoke** — every ```` ```python ```` fenced block in
-   ``docs/p4mr.md`` is executed top-to-bottom in one shared namespace,
-   so the API reference cannot drift from the actual API. Blocks are
-   written to be sequential: later blocks use names bound by earlier
-   ones.
+   ``docs/p4mr.md`` and ``docs/telemetry.md`` is executed top-to-bottom
+   in one shared namespace per document, so the API reference cannot
+   drift from the actual API. Blocks are written to be sequential:
+   later blocks use names bound by earlier ones.
 
     PYTHONPATH=src:. python benchmarks/docs_smoke.py
 """
@@ -91,8 +91,9 @@ def main() -> int:
         return 1
     n_files = len(_doc_files())
     print(f"ok: links resolve across {n_files} markdown file(s)")
-    n = run_snippets()
-    print(f"OK: {n} snippet block(s) from docs/p4mr.md ran clean")
+    for doc in ("docs/p4mr.md", "docs/telemetry.md"):
+        n = run_snippets(doc)
+        print(f"OK: {n} snippet block(s) from {doc} ran clean")
     return 0
 
 

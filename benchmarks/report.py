@@ -4,10 +4,23 @@ document can never disagree with the measured artifacts.
     PYTHONPATH=src python benchmarks/report.py dryrun results_dryrun_single.json
     PYTHONPATH=src python benchmarks/report.py roofline results_dryrun_single.json
     PYTHONPATH=src python benchmarks/report.py perf results_hillclimb.json
+
+``--history`` is the perf-trajectory view over the committed BENCH_*.json
+artifacts: for each one it reads the provenance record leading the file
+(when/where/which sha produced the numbers) in both the working tree and
+the committed baseline (``git show HEAD:...``), then prints per-cell
+deltas of every gated metric — the same metric set
+``check_regression.py`` enforces, so "what moved since the last commit"
+and "what CI will gate" are one list.
+
+    python benchmarks/report.py --history            # repo root
+    python benchmarks/report.py --history path/to/repo
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 
 
@@ -73,6 +86,87 @@ def perf_table(path):
               f"| {r.get('roofline_fraction',0):.4f} |")
 
 
+def _prov_line(prov):
+    if not prov:
+        return "(no provenance record)"
+    ts = prov.get("timestamp_utc", "?")
+    sha = prov.get("git_sha", "?")
+    return f"{ts} @{sha} on {prov.get('host', '?')}"
+
+
+def history(root: str | None = None) -> int:
+    """Per-cell gated-metric deltas: working tree vs committed baseline,
+    for every BENCH_*.json under ``root`` (default: the repo root above
+    benchmarks/). Exit code 0 always — this is a trend view, not a gate
+    (``check_regression.py`` is the gate)."""
+    try:
+        from benchmarks._provenance import strip_provenance
+        from benchmarks.check_regression import (
+            GATED_METRICS,
+            HIGHER_IS_BETTER,
+            cell_label,
+            record_key,
+        )
+    except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+        from _provenance import strip_provenance
+        from check_regression import (
+            GATED_METRICS,
+            HIGHER_IS_BETTER,
+            cell_label,
+            record_key,
+        )
+
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    names = sorted(
+        f for f in os.listdir(root)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not names:
+        print(f"no BENCH_*.json artifacts under {root}")
+        return 0
+    for fname in names:
+        with open(os.path.join(root, fname)) as f:
+            cur_prov, cur = strip_provenance(json.load(f))
+        try:
+            blob = subprocess.run(
+                ["git", "show", f"HEAD:{fname}"], cwd=root,
+                capture_output=True, text=True, timeout=10, check=True,
+            ).stdout
+            base_prov, base = strip_provenance(json.loads(blob))
+        except Exception:
+            base_prov, base = None, None
+        print(f"== {fname} ==")
+        print(f"  current : {_prov_line(cur_prov)}")
+        if base is None:
+            print("  baseline: (not committed yet — every cell is new)")
+        else:
+            print(f"  baseline: {_prov_line(base_prov)}")
+        base_by_key = {record_key(r): r for r in (base or [])}
+        for rec in cur:
+            key = record_key(rec)
+            b = base_by_key.get(key)
+            lines = []
+            for metric in (*GATED_METRICS, *HIGHER_IS_BETTER):
+                if metric not in rec:
+                    continue
+                c = float(rec[metric])
+                if b is None or metric not in b:
+                    lines.append(f"    {metric:<32} {'(new)':>12} -> {c:g}")
+                    continue
+                bv = float(b[metric])
+                delta = (c - bv) / bv * 100.0 if bv else 0.0
+                flag = "" if abs(delta) < 1e-9 else f"  ({delta:+.1f}%)"
+                lines.append(f"    {metric:<32} {bv:>12g} -> {c:g}{flag}")
+            if lines:
+                print(f"  cell [{cell_label(key)}]"
+                      + ("  (new — no baseline)" if b is None else ""))
+                print("\n".join(lines))
+    return 0
+
+
 if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] in ("--history", "history"):
+        sys.exit(history(sys.argv[2] if len(sys.argv) > 2 else None))
     kind, path = sys.argv[1], sys.argv[2]
     {"dryrun": dryrun_table, "roofline": roofline_table, "perf": perf_table}[kind](path)

@@ -19,6 +19,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   bench_roofline        — §Roofline aggregation of the dry-run sweeps
   bench_simulator       — event vs vectorized engine throughput, k∈{4,8}
   bench_scheduler       — online multi-tenant scheduler vs unscheduled merge
+  bench_telemetry       — streaming detectors: latency, overhead, recovery
 """
 from __future__ import annotations
 
@@ -37,6 +38,7 @@ from benchmarks import (
     bench_serialization,
     bench_shuffle,
     bench_simulator,
+    bench_telemetry,
 )
 
 MODULES = [
@@ -51,6 +53,7 @@ MODULES = [
     ("roofline", bench_roofline),
     ("simulator", bench_simulator),
     ("scheduler", bench_scheduler),
+    ("telemetry", bench_telemetry),
 ]
 
 

@@ -6,9 +6,13 @@ attached and ``CostModel.sim_telemetry`` enabled, then asserts the
 exported trace is Perfetto-loadable: valid JSON, monotonic timestamps
 per track, matched span nesting (``repro.telemetry.validate_chrome_trace``)
 — and that the spans the acceptance criteria name are actually present
-(every pass, every autotune round, the simulate call). Writes
-``trace.json`` + ``metrics.json`` (CI uploads both as artifacts) and
-prints the metrics dashboard. Exit 1 on any failure.
+(every pass, every autotune round, the simulate call). The streaming
+surface rides along: a detector suite watches the run's windows, its
+anomaly events export as Perfetto instant markers (``ph:"i"``) next to
+a ``fabric.queue_depth`` counter track (``ph:"C"``), both of which must
+validate and be present. Writes ``trace.json`` + ``metrics.json`` (CI
+uploads both as artifacts) and prints the metrics dashboard. Exit 1 on
+any failure.
 
     PYTHONPATH=src:. python benchmarks/trace_smoke.py [outdir]
 """
@@ -28,7 +32,8 @@ def main(argv: list[str] | None = None) -> int:
     from repro.core import topology, wordcount
     from repro.telemetry import report as tel_report, validate_chrome_trace
 
-    cm = CostModel(sim_telemetry=True, sim_telemetry_interval=8.0)
+    cm = CostModel(sim_telemetry=True, sim_telemetry_interval=4.0,
+                   sim_telemetry_window=16.0)
     sess = p4mr.Session(
         topology.fat_tree_topology(4),
         cost_model=cm,
@@ -43,7 +48,31 @@ def main(argv: list[str] | None = None) -> int:
     plan = sess.compile(prog, name="smoke")
     rep = sess.simulate()
 
+    # streaming surface: a second tenant arriving mid-run gives the
+    # detectors an onset to catch (a queue that only drains never trips
+    # a growth detector); its events export onto the same tracer as
+    # Perfetto instant markers + a counter track
+    from repro.telemetry import WindowRecorder, default_detectors, export_to_tracer
+
+    sess.compile(
+        wordcount.wordcount_shuffle_program(
+            4, 64, num_buckets=4,
+            weights=(4.0, 1.0, 1.0, 1.0),
+            hosts=[f"h{i}" for i in range(4, 8)], sink_host="h12",
+        ),
+        name="late",
+    )
+    suite = default_detectors(queue_threshold=4.0)
+    rec = WindowRecorder()
+    sess.simulate(arrivals={"late": 40.0}, observers=[suite, rec])
+    export_to_tracer(sess.telemetry.tracer, suite.events, rec.windows)
+    sess.telemetry.record_anomalies(suite.events)
+
     failures: list[str] = []
+    if not rec.windows:
+        failures.append("window stream produced no windows")
+    if not suite.events:
+        failures.append("detector suite found no anomalies on the skewed cell")
 
     # fabric telemetry rode along on the report
     tl = rep.combined.timeline
@@ -76,6 +105,13 @@ def main(argv: list[str] | None = None) -> int:
     spanned = {n[len("pass:"):] for n in names if n.startswith("pass:")}
     if not ran <= spanned:
         failures.append(f"passes without spans: {sorted(ran - spanned)}")
+
+    # the streaming export must land as instant + counter marks
+    phs = {e["ph"] for e in trace["traceEvents"]}
+    if "i" not in phs:
+        failures.append("no instant (ph:'i') anomaly markers in the trace")
+    if "C" not in phs:
+        failures.append("no counter (ph:'C') queue-depth samples in the trace")
 
     with open(metrics_path) as f:
         metrics = json.load(f)

@@ -107,6 +107,22 @@ class CostModel:
     sim_telemetry: bool = False
     # sample the fabric series every this many ticks
     sim_telemetry_interval: float = 16.0
+    # streaming aggregation window (repro.telemetry.stream), in ticks:
+    # samples are folded into windows this wide and pushed to observers
+    # passed via simulate_timing(..., observers=[...]) while the run is
+    # live. A window normally spans several sample intervals
+    sim_telemetry_window: float = 64.0
+
+    def __post_init__(self) -> None:
+        # a zero/negative sampling period would spin the collectors
+        # forever (the boundary cursor never advances past t) — reject at
+        # construction, naming the knob, instead of hanging a simulation
+        for knob in ("sim_telemetry_interval", "sim_telemetry_window"):
+            v = getattr(self, knob)
+            if not v > 0:
+                raise ValueError(
+                    f"CostModel.{knob} must be > 0 ticks, got {v!r}"
+                )
 
     # ------------------------------------------------------------ traffic --
     @property

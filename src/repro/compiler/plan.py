@@ -103,18 +103,29 @@ class CompiledPlan:
             self._flow_spec = build_flow_spec(self.program, self.routes, self.cost_model)
         return self._flow_spec
 
-    def simulate_timing(self, *, engine: str | None = None):
+    def simulate_timing(self, *, engine: str | None = None, observers=None):
         """Timing half of the simulator alone (no input arrays needed);
         returns a ``SimReport``. Streamed makespan depends on traffic
         shapes, not payload values — this is what bucket-count
         arbitration and the reroute-feedback loop consume. Memoized per
         engine: program/routes are fixed once emitted, and arbitration +
-        stats + benchmarks would otherwise re-run the same simulation."""
+        stats + benchmarks would otherwise re-run the same simulation.
+
+        ``observers`` (streaming telemetry sinks — see
+        ``repro.telemetry.stream``) bypass the memo both ways: the run
+        always executes (observers see live windows) and its report is
+        not cached (it carries a timeline the default path didn't ask
+        for)."""
         from repro.compiler.simulator import ENGINES, simulate_timing
 
         eng = engine if engine is not None else getattr(self.cost_model, "sim_engine", "vectorized")
         if eng not in ENGINES:
             raise ValueError(f"unknown simulator engine {eng!r}; one of {ENGINES}")
+        if observers:
+            return simulate_timing(
+                self.program, self.routes, self.cost_model,
+                engine=eng, spec=self.flow_spec(), observers=observers,
+            )
         reports = getattr(self, "_timing_reports", None)
         if reports is None:
             reports = self._timing_reports = {}

@@ -63,7 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Hashable, Mapping
+from typing import Any, Hashable, Mapping, Sequence
 
 import numpy as np
 
@@ -236,6 +236,7 @@ def simulate_timing(
     engine: str | None = None,
     spec: FlowSpec | None = None,
     release: Mapping[str, float] | None = None,
+    observers: Sequence[Any] | None = None,
 ) -> SimReport:
     """Stream every routed edge's packet train through the fabric model;
     returns the timing report.
@@ -252,6 +253,13 @@ def simulate_timing(
     release at 0; labels of non-source nodes are ignored — a node's own
     floor is the max of its sources' release ticks, propagated down the
     program DAG (see ``_release_floors``).
+
+    ``observers`` subscribes streaming-telemetry observers (see
+    ``repro.telemetry.stream``) to this run: windowed per-switch/port
+    aggregates and node-completion events are pushed to them *during*
+    the simulation. Passing observers forces sample collection on for
+    this run even when ``CostModel.sim_telemetry`` is off; the default
+    (no observers, telemetry off) pays nothing.
     """
     eng = engine if engine is not None else getattr(cost_model, "sim_engine", "vectorized")
     if eng not in ENGINES:
@@ -259,10 +267,14 @@ def simulate_timing(
     if spec is None:
         spec = build_flow_spec(program, routes, cost_model)
     if eng == "event":
-        return _simulate_event(program, spec, cost_model, release=release)
+        return _simulate_event(
+            program, spec, cost_model, release=release, observers=observers
+        )
     from repro.compiler.vectorized import simulate_vectorized
 
-    return simulate_vectorized(program, spec, cost_model, release=release)
+    return simulate_vectorized(
+        program, spec, cost_model, release=release, observers=observers
+    )
 
 
 def _release_floors(
@@ -367,21 +379,35 @@ def _simulate_event(
     *,
     scheduler: str = "heap",
     release: Mapping[str, float] | None = None,
+    observers: Sequence[Any] | None = None,
 ) -> SimReport:
     """The per-packet event-ordered core (see module docstring).
 
     ``scheduler="calendar"`` swaps the global heap for the tick-bucket
     calendar — identical event order, hence bit-identical reports; the
     vectorized engine's ``fidelity="fifo"`` compatibility mode runs this.
-    ``release`` delays source readiness (see ``simulate_timing``).
+    ``release`` delays source readiness (see ``simulate_timing``);
+    ``observers`` subscribes streaming sinks (windows + node events are
+    pushed mid-run, and force sample collection on for this run).
     """
     cm = cost_model
     engine_label = "event" if scheduler == "heap" else "vectorized"
+    stream = None
+    if observers:
+        from repro.telemetry.stream import WindowedStream
+
+        stream = WindowedStream(
+            observers,
+            window_ticks=getattr(cm, "sim_telemetry_window", 64.0),
+            engine=engine_label,
+        )
     tel = None
-    if getattr(cm, "sim_telemetry", False):
+    if getattr(cm, "sim_telemetry", False) or stream is not None:
         from repro.telemetry.fabric import EventCollector
 
-        tel = EventCollector(getattr(cm, "sim_telemetry_interval", 16.0))
+        tel = EventCollector(
+            getattr(cm, "sim_telemetry_interval", 16.0), stream=stream
+        )
     flows = [_Flow(spec=fd) for fd in spec.flows]
     pending = dict(spec.in_degree)
     arrived: dict[str, float] = {}  # node -> latest in-flow last-packet arrival
@@ -422,6 +448,8 @@ def _simulate_event(
         if name in ready:
             return
         ready[name] = t
+        if stream is not None:
+            stream.on_node(name, t)
         for fid in spec.out_flows.get(name, ()):
             inject(fid, t)
 
@@ -470,7 +498,7 @@ def _simulate_event(
     while sched:
         t, ev = sched.pop()
         if tel is not None:
-            tel.advance(t, next_free)
+            tel.advance(t, next_free, busy)
         if ev[0] == "recirc":
             name = ev[1]
             merges = spec.merges[name]
@@ -523,8 +551,10 @@ def _simulate_event(
     makespan = max((ready.get(s, 0.0) for s in sinks), default=0.0)
     timeline = None
     if tel is not None:
-        tel.advance(makespan, next_free)  # trailing samples after the last event
+        tel.advance(makespan, next_free, busy)  # trailing samples
         timeline = tel.finish(makespan, engine_label)
+    if stream is not None:
+        stream.finish(makespan)
     time_s = makespan * cm.tick_s + recirc * cm.recirculation_s
     total = makespan if makespan > 0 else 1.0
     return SimReport(

@@ -108,6 +108,7 @@ def simulate_vectorized(
     *,
     params: VoqParams | None = None,
     release: Mapping[str, float] | None = None,
+    observers=None,
 ):
     """Run the vectorized engine over a prebuilt ``FlowSpec``.
 
@@ -115,14 +116,17 @@ def simulate_vectorized(
     ``simulator.simulate_timing``): a flow whose source releases in the
     future is parked on an arrival heap and injected when the fluid
     clock reaches its release tick, so late-arriving jobs never occupy
-    queue or buffer state early.
+    queue or buffer state early. ``observers`` subscribes streaming
+    sinks (see ``repro.telemetry.stream``) — windows and node events are
+    pushed mid-run, forcing sample collection on for this run.
     """
     p = params if params is not None else VoqParams.from_cost_model(cost_model)
     if p.fidelity == "fifo":
         from repro.compiler.simulator import _simulate_event
 
         return _simulate_event(
-            program, spec, cost_model, scheduler="calendar", release=release
+            program, spec, cost_model, scheduler="calendar", release=release,
+            observers=observers,
         )
     if p.fidelity != "voq":
         raise ValueError(
@@ -133,10 +137,11 @@ def simulate_vectorized(
             f"unknown sim_buffer_policy {p.buffer_policy!r}; "
             "one of 'backpressure', 'drop'"
         )
-    return _simulate_voq(program, spec, cost_model, p, release=release)
+    return _simulate_voq(program, spec, cost_model, p, release=release,
+                         observers=observers)
 
 
-def _simulate_voq(program, spec, cm, p: VoqParams, release=None):
+def _simulate_voq(program, spec, cm, p: VoqParams, release=None, observers=None):
     flows = spec.flows
     # ---------------------------------------------------------- indexing --
     switches: list[NodeId] = []
@@ -207,13 +212,25 @@ def _simulate_voq(program, spec, cm, p: VoqParams, release=None):
     maxlvl = int(lvl.max()) if n else 0
 
     # ---- opt-in INT telemetry (CostModel.sim_telemetry): sampled series
-    # via the collector + per-entry arrival/departure/max-depth arrays
+    # via the collector + per-entry arrival/departure/max-depth arrays.
+    # Streaming observers force collection on for this run (they consume
+    # the same samples, windowed, mid-flight)
+    stream = None
+    if observers:
+        from repro.telemetry.stream import WindowedStream
+
+        stream = WindowedStream(
+            observers,
+            window_ticks=getattr(cm, "sim_telemetry_window", 64.0),
+            engine="vectorized",
+        )
     tel = None
-    if getattr(cm, "sim_telemetry", False):
+    if getattr(cm, "sim_telemetry", False) or stream is not None:
         from repro.telemetry.fabric import VoqCollector
 
         tel = VoqCollector(
-            getattr(cm, "sim_telemetry_interval", 16.0), esw, pid, ns, nport
+            getattr(cm, "sim_telemetry_interval", 16.0), esw, pid, ns, nport,
+            switches=switches, ports=ports, stream=stream,
         )
         tl_first = np.full(n, _INF)  # first fluid arrival per entry
         tl_done = np.zeros(n)  # retirement tick per entry
@@ -266,6 +283,8 @@ def _simulate_voq(program, spec, cm, p: VoqParams, release=None):
         if name in ready:  # fire-once (see the event engine's guard)
             return
         ready[name] = tt
+        if stream is not None:
+            stream.on_node(name, tt)
         for fid in spec.out_flows.get(name, ()):
             inject(fid, tt)
 
@@ -638,7 +657,12 @@ def _simulate_voq(program, spec, cm, p: VoqParams, release=None):
                 # sample ticks that landed in (t-dt, t]
                 tel.sample(t - dt, dt, tel_q0, q,
                            qeff, np.maximum(q - fill, 0.0),
-                           drops_p, blocked_p)
+                           drops_p, blocked_p,
+                           served_s=(
+                               np.bincount(esw, weights=served_tot,
+                                           minlength=ns)
+                               if stream is not None else None
+                           ))
 
         # busy-period priorities: reset on drain, stamp on backlog formation
         has_backlog = active & (q > _RETIRE)
@@ -711,6 +735,8 @@ def _simulate_voq(program, spec, cm, p: VoqParams, release=None):
             served_tot=served_tot, pid_full=pid, hop_meta=hop_meta,
             first_t=tl_first, done_t=tl_done, maxq=tl_maxq,
         )
+    if stream is not None:
+        stream.finish(makespan)
 
     def port_dict(vals: np.ndarray) -> dict:
         return {

@@ -27,10 +27,14 @@ switches as a shared parallel computing device made operational:
 * **session-level reroute feedback** — after admission, whole-fleet
   reroute rounds rebuild every job's routes against the *merged*
   measured pressure, accepted only when the objective improves;
-* **plan hot-swap** — when a job's measured per-switch pressure in the
-  merged run drifts past ``drift_threshold`` from its compile-time
-  (solo) profile, the job is retuned via ``autotune.tune`` and the new
-  plan is swapped in if the merged objective improves.
+* **plan hot-swap** — a monitored profiling run streams windowed fabric
+  aggregates to an anomaly-detector suite and SLO monitor *while it
+  executes* (``repro.telemetry.stream`` / ``.anomaly`` / ``.slo``); jobs
+  whose routes a detector event implicates are retuned first (via
+  ``autotune.tune``, accepted only if the merged objective improves),
+  with the end-of-run pressure-drift threshold (``drift_threshold`` vs
+  the compile-time solo profile) as fallback — and as the only trigger
+  when ``monitor=False``.
 
 Every candidate configuration is scored on the same merged simulation,
 and the all-solo configuration (the "unscheduled merge") is always in
@@ -80,13 +84,23 @@ class Admission:
 
 @dataclasses.dataclass(frozen=True)
 class HotSwap:
-    """One drift-triggered retune attempt (phase D)."""
+    """One retune attempt (phase D), with what triggered it.
+
+    ``trigger`` is ``"anomaly"`` when a streaming detector event
+    implicated the job's route mid-run (the monitored path), ``"drift"``
+    when only the end-of-run pressure delta crossed the threshold. The
+    anomaly fields carry the earliest implicating event's identity and
+    how fast the detector caught it."""
 
     name: str
     drift: float  # max relative per-switch pressure drift vs solo profile
     accepted: bool
     makespan_before: int
     makespan_after: int
+    trigger: str = "drift"  # "anomaly" | "drift"
+    anomaly: str = ""  # implicating event kind ("" on the drift path)
+    onset_tick: float | None = None  # implicating event onset
+    detection_latency_ticks: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +121,11 @@ class ScheduleReport:
     hot_swaps: tuple[HotSwap, ...]
     deadline_miss_ticks: dict[str, int]  # late jobs only
     weighted_flow_ticks: float  # Σ weight · (finish − arrival)
+    # streaming-monitor products (empty when monitor=False / retune off):
+    anomalies: tuple[Any, ...] = ()  # telemetry.anomaly.AnomalyEvent, merged
+    slo_statuses: dict[str, Any] = dataclasses.field(  # job -> SloStatus
+        default_factory=dict
+    )
 
     @property
     def admitted(self) -> list[str]:
@@ -152,6 +171,8 @@ class ScheduleReport:
         if self.hot_swaps:
             n_ok = sum(1 for s in self.hot_swaps if s.accepted)
             parts.append(f"{n_ok}/{len(self.hot_swaps)} hot-swap(s) accepted")
+        if self.anomalies:
+            parts.append(f"{len(self.anomalies)} anomaly event(s)")
         if self.deadline_miss_ticks:
             miss = ", ".join(
                 f"{n}+{v}t" for n, v in sorted(self.deadline_miss_ticks.items())
@@ -238,6 +259,8 @@ class Scheduler:
         drift_threshold: float = 0.75,
         retune_rounds: int = 2,
         engine: str | None = None,
+        monitor: bool = True,
+        detectors=None,
     ):
         if objective not in OBJECTIVES:
             raise ValueError(
@@ -254,6 +277,14 @@ class Scheduler:
         self.drift_threshold = float(drift_threshold)
         self.retune_rounds = int(retune_rounds)
         self.engine = engine
+        # phase-D streaming monitor: when on (default), hot-swap triggers
+        # off live detector events (repro.telemetry.anomaly) watching the
+        # merged run's windows, with end-of-run drift as fallback; when
+        # off, only the drift threshold fires (the pre-monitor behavior).
+        # ``detectors`` is a zero-arg factory for a fresh DetectorSuite
+        # per run (detectors are stateful); default ``default_detectors``
+        self.monitor = bool(monitor)
+        self.detectors = detectors
         self.requests: list[JobRequest] = []
 
     # ------------------------------------------------------------ submit --
@@ -355,11 +386,15 @@ class Scheduler:
         )
 
     def _merged(self, plans: Mapping[str, Any], arrivals: Mapping[str, float],
-                engine: str | None, *, telemetry: bool = False):
+                engine: str | None, *, telemetry: bool = False,
+                observers=None):
         """One shared simulation of ``plans`` under staggered release.
         ``telemetry=True`` forces fabric telemetry on (a profiling run),
         so ``measured_switch_pressure`` sees the depth-integral signal
-        even when the session's cost model leaves it off."""
+        even when the session's cost model leaves it off. ``observers``
+        are streaming sinks (``repro.telemetry.stream``) fed windowed
+        aggregates while the run executes — passing any also forces
+        collection on."""
         from repro.compiler.simulator import simulate_timing
 
         cm = self.session.cost_model
@@ -373,7 +408,8 @@ class Scheduler:
             for node in plans[name].program.nodes
         }
         return simulate_timing(
-            program, routes, cm, engine=engine, release=release or None
+            program, routes, cm, engine=engine, release=release or None,
+            observers=observers,
         )
 
     def _finish_of(self, rep, plans: Mapping[str, Any]) -> dict[str, float]:
@@ -519,20 +555,53 @@ class Scheduler:
                 else:
                     break
 
-            # ---- phase D: pressure-drift hot-swap via autotune
+            # ---- phase D: detector-driven hot-swap via autotune. One
+            # monitored profiling run streams windowed fabric aggregates
+            # to the anomaly suite + SLO monitor while it executes; jobs
+            # whose routes an event implicates are retuned first (onset
+            # order, any measurable drift qualifies), then jobs whose
+            # end-of-run pressure drift alone crosses the threshold —
+            # transient bursts dilute into a small end-of-run delta, so
+            # the windowed path catches what the threshold path misses
             swaps: list[HotSwap] = []
+            anomalies: tuple = ()
+            slo_statuses: dict[str, Any] = {}
+            monitor_windows: tuple = ()
             if self.retune_rounds > 0:
+                if self.monitor:
+                    from repro.telemetry.anomaly import default_detectors
+                    from repro.telemetry.slo import (
+                        SloMonitor,
+                        targets_from_requests,
+                    )
+                    from repro.telemetry.stream import WindowRecorder
+
+                    suite = (
+                        self.detectors()
+                        if self.detectors is not None
+                        else default_detectors()
+                    )
+                    mon = SloMonitor(
+                        targets_from_requests(
+                            [by_name[n] for n in plans], plans
+                        )
+                    )
+                    winrec = WindowRecorder()
+                    self._merged(
+                        plans, arrivals, eng, observers=[suite, mon, winrec]
+                    )
+                    anomalies = suite.events
+                    slo_statuses = mon.statuses()
+                    monitor_windows = tuple(winrec.windows)
+
                 merged_pressure = switch_pressure(best_rep)
-                for req in order:
-                    name = req.name
-                    pl = plans.get(name)
-                    if pl is None:
-                        continue
+                drifts: dict[str, float] = {}
+                for name, pl in plans.items():
                     profile = switch_pressure(pl.simulate_timing(engine=eng))
                     on_route = {
                         sw for r in pl.routes.routes for sw in r.path
                     }
-                    drift = max(
+                    drifts[name] = max(
                         (
                             (merged_pressure.get(sw, 0.0) - profile.get(sw, 0.0))
                             / (profile.get(sw, 0.0) + 1.0)
@@ -540,9 +609,36 @@ class Scheduler:
                         ),
                         default=0.0,
                     )
-                    if drift <= self.drift_threshold:
+                # earliest implicating event per job: the event's switch
+                # lies on the job's route
+                implicated: dict[str, Any] = {}
+                for ev in sorted(
+                    anomalies, key=lambda e: (e.onset_tick, e.detect_tick)
+                ):
+                    for name, pl in plans.items():
+                        if name not in implicated and any(
+                            ev.switch in r.path for r in pl.routes.routes
+                        ):
+                            implicated[name] = ev
+                candidates = sorted(
+                    plans,
+                    key=lambda n: (
+                        n not in implicated,  # anomaly-implicated first...
+                        implicated[n].onset_tick if n in implicated
+                        else by_name[n].submit_tick,  # ...in onset order
+                        n,
+                    ),
+                )
+                for name in candidates:
+                    drift = drifts[name]
+                    ev = implicated.get(name)
+                    if ev is not None and drift > 0.0:
+                        trigger = "anomaly"
+                    elif drift > self.drift_threshold:
+                        trigger, ev = "drift", None
+                    else:
                         continue
-                    tuned = autotune.tune(pl, rounds=self.retune_rounds)
+                    tuned = autotune.tune(plans[name], rounds=self.retune_rounds)
                     score, rep = self._config_score(
                         {**plans, name: tuned}, arrivals, by_name, eng
                     )
@@ -554,6 +650,13 @@ class Scheduler:
                             accepted=ok,
                             makespan_before=best_rep.makespan_ticks,
                             makespan_after=rep.makespan_ticks,
+                            trigger=trigger,
+                            anomaly="" if ev is None else ev.kind,
+                            onset_tick=None if ev is None else ev.onset_tick,
+                            detection_latency_ticks=(
+                                None if ev is None
+                                else ev.detection_latency_ticks
+                            ),
                         )
                     )
                     if ok:
@@ -572,6 +675,15 @@ class Scheduler:
                 sess.telemetry.record_compile(pl, name=name)
         if sess.telemetry is not None:
             sess.telemetry.record_simulation(best_rep, label="scheduled")
+            if anomalies or slo_statuses:
+                from repro.telemetry.anomaly import export_to_tracer
+
+                sess.telemetry.record_anomalies(anomalies)
+                sess.telemetry.record_slo(slo_statuses.values())
+                # anomaly flags + queue-depth counter track on the trace
+                export_to_tracer(
+                    sess.telemetry.tracer, anomalies, monitor_windows
+                )
 
         finish = self._finish_of(best_rep, plans)
         miss = {
@@ -597,4 +709,6 @@ class Scheduler:
             hot_swaps=tuple(swaps),
             deadline_miss_ticks=miss,
             weighted_flow_ticks=round(wflow, 3),
+            anomalies=tuple(anomalies),
+            slo_statuses=dict(slo_statuses),
         )

@@ -396,6 +396,7 @@ class Session:
         names: Sequence[str] | None = None,
         engine: str | None = None,
         arrivals: Mapping[str, float] | None = None,
+        observers: Sequence | None = None,
     ) -> SessionReport:
         """Stream every registered job's packet trains through the shared
         fabric at once (the multi-tenant switch story).
@@ -411,6 +412,10 @@ class Session:
         outputs; ``names`` restricts which jobs share the run. ``engine``
         picks the simulator core ("event" | "vectorized") for both the
         combined and the solo runs; default is ``CostModel.sim_engine``.
+        ``observers`` are streaming telemetry sinks (detector suites,
+        ``SloMonitor``s, ``WindowRecorder``s — ``repro.telemetry.stream``)
+        fed windowed fabric aggregates from the *combined* run while it
+        executes; passing any forces fabric collection on for that run.
         """
         from repro.compiler.simulator import simulate_timing
 
@@ -446,7 +451,7 @@ class Session:
             }
             combined = simulate_timing(
                 program, routes, self.cost_model, engine=engine,
-                release=release or None,
+                release=release or None, observers=observers,
             )
             solo = {n: pl.simulate_timing(engine=engine) for n, pl in picked.items()}
             finish = {

@@ -29,6 +29,15 @@ from __future__ import annotations
 
 from typing import Any
 
+from repro.telemetry.anomaly import (
+    AnomalyEvent,
+    CusumDetector,
+    DetectorSuite,
+    EwmaDetector,
+    attribute_flows,
+    default_detectors,
+    export_to_tracer,
+)
 from repro.telemetry.fabric import (
     EventCollector,
     HopRecord,
@@ -42,8 +51,11 @@ from repro.telemetry.fabric import (
     rank_hot,
     switch_pressure,
     timeline_pressure,
+    verify_timeline,
 )
 from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.slo import SloMonitor, SloStatus, SloTarget
+from repro.telemetry.stream import Window, WindowedStream, WindowRecorder
 from repro.telemetry.trace import (
     Span,
     Tracer,
@@ -128,6 +140,36 @@ class Telemetry:
                 ports.add(f"{port[0]}→{port[1]}", pk)
             m.series("fabric.queue_depth").extend(tl.ticks, tl.total_depth_series())
 
+    def record_anomalies(self, events) -> None:
+        """Fold detector output (``anomaly.AnomalyEvent``s) into metrics:
+        event count, per-kind and per-switch tables, and the
+        detection-latency distribution the bench gates on."""
+        m = self.metrics
+        by_kind = m.table("anomaly.by_kind")
+        by_switch = m.table("anomaly.by_switch")
+        lat = m.histogram("anomaly.detection_latency_ticks")
+        for ev in events:
+            m.counter("anomaly.events").inc()
+            by_kind.add(ev.kind, 1)
+            by_switch.add(str(ev.switch), 1)
+            lat.observe(ev.detection_latency_ticks)
+
+    def record_slo(self, statuses) -> None:
+        """Fold SLO monitor output (``slo.SloStatus``es) into metrics:
+        per-job margin gauges, the violation count, and the blamed hot
+        switches behind at-risk jobs."""
+        m = self.metrics
+        hot = m.table("slo.hot_switches")
+        for st in statuses:
+            margin = st.margin_ticks
+            if margin is not None:
+                m.gauge(f"slo.{st.job}.margin_ticks").set(margin)
+            if st.violated:
+                m.counter("slo.violations").inc()
+            if st.at_risk:
+                for sw in st.hot_switches:
+                    hot.add(str(sw), 1)
+
     # ------------------------------------------------------------- export --
     def write_trace(self, path: str) -> None:
         """Write the collected spans as Chrome trace-event JSON (load in
@@ -141,16 +183,29 @@ class Telemetry:
 
 
 __all__ = [
+    "AnomalyEvent",
+    "CusumDetector",
+    "DetectorSuite",
     "EventCollector",
+    "EwmaDetector",
     "HopRecord",
     "MetricsRegistry",
+    "SloMonitor",
+    "SloStatus",
+    "SloTarget",
     "Span",
     "Telemetry",
     "Timeline",
     "Tracer",
     "VoqCollector",
+    "Window",
+    "WindowRecorder",
+    "WindowedStream",
     "activate",
+    "attribute_flows",
     "current_tracer",
+    "default_detectors",
+    "export_to_tracer",
     "hottest",
     "link_pressure",
     "maybe_span",
@@ -161,4 +216,5 @@ __all__ = [
     "switch_pressure",
     "timeline_pressure",
     "validate_chrome_trace",
+    "verify_timeline",
 ]

@@ -156,26 +156,35 @@ class EventCollector:
     (flow, hop): first arrival, last departure, deepest backlog seen.
     """
 
-    def __init__(self, interval: float):
+    def __init__(self, interval: float, stream=None):
         self.interval = max(float(interval), _EPS)
         self._next = self.interval
+        self.stream = stream  # optional stream.WindowedStream fan-out
         self.ticks: list[float] = []
         self._rows: list[dict[NodeId, float]] = []
         self.port_packets: dict[Port, float] = {}
         # (key) -> [src, dst, hop, sw, port, packets, first_t, last_t, maxdepth]
         self._hops: dict[tuple, list] = {}
 
-    def advance(self, t: float, next_free: Mapping[NodeId, float]) -> None:
+    def advance(
+        self,
+        t: float,
+        next_free: Mapping[NodeId, float],
+        served: Mapping[NodeId, float] | None = None,
+    ) -> None:
         """Emit per-switch queue-depth samples for every interval
         boundary at or before ``t`` (depth = each switch's backlog,
-        ``next_free − sample tick``)."""
+        ``next_free − sample tick``). ``served`` is the engine's
+        cumulative per-switch busy-tick map, forwarded to the streaming
+        sink when one is attached."""
         while self._next <= t + _EPS:
             ts = self._next
-            self._rows.append(
-                {sw: nf - ts for sw, nf in next_free.items() if nf - ts > _EPS}
-            )
+            row = {sw: nf - ts for sw, nf in next_free.items() if nf - ts > _EPS}
+            self._rows.append(row)
             self.ticks.append(ts)
             self._next += self.interval
+            if self.stream is not None:
+                self.stream.add_sample(ts, row, cum_served=served)
 
     def on_service(
         self, key: tuple, src: str, dst: str, hop: int, sw: NodeId, port: Port,
@@ -234,10 +243,19 @@ class VoqCollector:
     """
 
     def __init__(self, interval: float, esw: np.ndarray, pid: np.ndarray,
-                 ns: int, nport: int):
+                 ns: int, nport: int, *, switches=None, ports=None, stream=None):
         self.interval = max(float(interval), _EPS)
         self._next = self.interval
         self._esw, self._pid, self._ns, self._nport = esw, pid, ns, nport
+        self.stream = stream  # optional stream.WindowedStream fan-out
+        # switch ids / (a, b) port index pairs, needed to name streamed
+        # samples while the run is live (finish() also receives them)
+        self._switches = list(switches) if switches is not None else None
+        self._port_of = (
+            [(switches[a], switches[b]) for a, b in ports]
+            if switches is not None and ports is not None
+            else None
+        )
         self.ticks: list[float] = []
         self._sw_rows: list[np.ndarray] = []
         self._port_rows: list[np.ndarray] = []
@@ -253,11 +271,14 @@ class VoqCollector:
         self, t: float, dt: float, q0: np.ndarray, q1: np.ndarray,
         qeff0: np.ndarray, qeff1: np.ndarray,
         drops_p: np.ndarray, blocked_p: np.ndarray,
+        served_s: np.ndarray | None = None,
     ) -> None:
         """Emit samples for every interval boundary inside the closed-form
         step ``[t, t+dt)``: queue depths are interpolated linearly between
         the step's start/end vectors (the fluid core's state is exactly
-        linear within a step), drop/blocked counters are carried as-is."""
+        linear within a step), drop/blocked counters are carried as-is.
+        ``served_s`` (cumulative per-switch service, only computed when a
+        stream is attached) feeds the live windowed sink."""
         sw0 = np.bincount(self._esw, weights=q0, minlength=self._ns)
         sw1 = np.bincount(self._esw, weights=q1, minlength=self._ns)
         p0 = np.bincount(self._pid, weights=qeff0, minlength=self._nport)
@@ -267,10 +288,23 @@ class VoqCollector:
             frac = (self._next - t) / dt if dt > _EPS else 1.0
             frac = min(max(frac, 0.0), 1.0)
             self.ticks.append(self._next)
-            self._sw_rows.append(sw0 + (sw1 - sw0) * frac)
-            self._port_rows.append(p0 + (p1 - p0) * frac)
+            sw_row = sw0 + (sw1 - sw0) * frac
+            p_row = p0 + (p1 - p0) * frac
+            self._sw_rows.append(sw_row)
+            self._port_rows.append(p_row)
             self._drop_rows.append(drops_p.copy())
             self._blk_rows.append(blocked_p.copy())
+            if self.stream is not None and self._switches is not None:
+                sws, pof = self._switches, self._port_of
+                self.stream.add_sample(
+                    self._next,
+                    {sws[s]: float(v) for s, v in enumerate(sw_row) if v > _EPS},
+                    {pof[j]: float(v) for j, v in enumerate(p_row) if v > _EPS},
+                    {pof[j]: float(v) for j, v in enumerate(drops_p) if v > _EPS},
+                    {pof[j]: float(v) for j, v in enumerate(blocked_p) if v > _EPS},
+                    None if served_s is None else
+                    {sws[s]: float(v) for s, v in enumerate(served_s) if v > _EPS},
+                )
             self._next += self.interval
 
     def finish(
@@ -334,6 +368,42 @@ class VoqCollector:
                 if pkt_p[j] > _EPS
             },
             hop_records=tuple(records),
+        )
+
+
+# ------------------------------------------------------- reconciliation --
+def verify_timeline(report, *, atol: float = 0.5) -> None:
+    """Cross-check a report's ``Timeline`` against its own counters.
+
+    The cumulative drop series' final samples must agree with the
+    report's ``port_drops`` totals, and the timeline's exact
+    ``port_packets`` must account for ``packet_hops`` plus
+    recirculations. Disagreement means the collector and the engine
+    diverged — a bug, not noise — so this *raises* (``ValueError``)
+    rather than silently reconciling; the tolerance only absorbs the
+    final sample landing up to one interval before the last drop.
+    No-op when the report has no timeline (telemetry was off)."""
+    tl = getattr(report, "timeline", None)
+    if tl is None:
+        return
+    drops = tl.final_drops()
+    reported = {p: float(v) for p, v in getattr(report, "port_drops", {}).items()}
+    for port in sorted(set(drops) | set(reported), key=str):
+        a, b = drops.get(port, 0.0), reported.get(port, 0.0)
+        if abs(a - b) > atol + _EPS:
+            raise ValueError(
+                f"timeline/report drop mismatch at port {port[0]}→{port[1]}: "
+                f"timeline cumulative series ends at {a:g} but the report "
+                f"counted {b:g} dropped packets — the collector and engine "
+                "disagree about this run"
+            )
+    total_pk = sum(tl.port_packets.values())
+    expected = float(report.packet_hops + report.recirculations)
+    if abs(total_pk - expected) > atol + _EPS:
+        raise ValueError(
+            f"timeline/report packet mismatch: timeline port_packets sum to "
+            f"{total_pk:g} but the report counted {expected:g} "
+            "(packet_hops + recirculations)"
         )
 
 

@@ -98,6 +98,47 @@ def render(data: dict, *, top: int = 8) -> str:
                 bar = "#" * max(1, int(v / peak * 40))
                 lines.append(f"  {key:<{width}}  {v:>12g}  {bar}")
 
+    # anomaly / SLO panel (Telemetry.record_anomalies / record_slo)
+    by_kind = data.get("tables", {}).get("anomaly.by_kind")
+    if by_kind:
+        total = counters.get("anomaly.events", sum(by_kind.values()))
+        lines.append(f"== anomalies ({total:g} events) ==")
+        width = max(len(k) for k in by_kind)
+        for kind, n in sorted(by_kind.items(), key=lambda kv: (-kv[1], kv[0])):
+            lines.append(f"  {kind:<{width}}  x{n:g}")
+        lat = hists.get("anomaly.detection_latency_ticks")
+        if lat:
+            lines.append(
+                f"  detection latency: mean {lat['mean']:.4g} ticks, "
+                f"p95 {lat['p95']:.4g}, max {lat['max']:.4g}"
+            )
+        blamed = data.get("tables", {}).get("anomaly.by_switch")
+        if blamed:
+            ranked = sorted(blamed.items(), key=lambda kv: (-kv[1], kv[0]))[:top]
+            lines.append(
+                "  implicated switches: "
+                + ", ".join(f"{sw} (x{n:g})" for sw, n in ranked)
+            )
+    slo_margins = {
+        k[len("slo."):-len(".margin_ticks")]: v
+        for k, v in gauges.items()
+        if k.startswith("slo.") and k.endswith(".margin_ticks")
+    }
+    if slo_margins:
+        viol = counters.get("slo.violations", 0)
+        lines.append(f"== SLO margins ({viol:g} violations) ==")
+        width = max(len(j) for j in slo_margins)
+        for job, margin in sorted(slo_margins.items(), key=lambda kv: kv[1]):
+            flag = "MISS" if margin < 0 else "ok"
+            lines.append(f"  {job:<{width}}  {margin:>+10g} ticks  {flag}")
+        hot = data.get("tables", {}).get("slo.hot_switches")
+        if hot:
+            ranked = sorted(hot.items(), key=lambda kv: (-kv[1], kv[0]))[:top]
+            lines.append(
+                "  blamed hot switches: "
+                + ", ".join(f"{sw} (x{n:g})" for sw, n in ranked)
+            )
+
     depth = data.get("series", {}).get("fabric.queue_depth")
     if depth:
         vals = [v for _, v in depth]

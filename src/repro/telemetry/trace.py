@@ -32,7 +32,7 @@ import contextvars
 import dataclasses
 import json
 import time
-from typing import Any, Iterator
+from typing import Any, Iterator, Mapping
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +59,9 @@ class Tracer:
     def __init__(self) -> None:
         self._t0 = time.perf_counter()
         self.spans: list[Span] = []
+        # instant ("i") and counter ("C") marks, kept as raw trace-event
+        # dicts; anomaly/SLO exports land here (repro.telemetry.anomaly)
+        self.marks: list[dict] = []
 
     def _now_us(self) -> float:
         return (time.perf_counter() - self._t0) * 1e6
@@ -88,10 +91,54 @@ class Tracer:
         self.spans.append(sp)
         return sp
 
+    def instant(self, name: str, *, ts_us: float | None = None,
+                tid: int = 0, scope: str = "t", **attrs: Any) -> dict:
+        """Record an instant event (``ph:"i"``) — a zero-duration marker
+        (Perfetto draws a flag). ``scope`` is the trace-event instant
+        scope: "t" (thread), "p" (process) or "g" (global). Put events
+        whose timestamps are *not* wall microseconds (e.g. simulated
+        ticks) on their own ``tid`` so per-track monotonicity holds."""
+        if scope not in ("t", "p", "g"):
+            raise ValueError(f"instant scope must be 't', 'p' or 'g', got {scope!r}")
+        ev = {
+            "name": name,
+            "ph": "i",
+            "ts": round(self._now_us() if ts_us is None else float(ts_us), 3),
+            "pid": 0,
+            "tid": tid,
+            "s": scope,
+            "args": {k: _jsonable(v) for k, v in attrs.items()},
+        }
+        self.marks.append(ev)
+        return ev
+
+    def counter(self, name: str, *, ts_us: float | None = None,
+                values: Mapping[str, float], tid: int = 0) -> dict:
+        """Record a counter sample (``ph:"C"``) — Perfetto renders each
+        args key as one series on a counter track named ``name``."""
+        if not values:
+            raise ValueError("counter event needs at least one value series")
+        bad = {k: v for k, v in values.items()
+               if not isinstance(v, (int, float)) or isinstance(v, bool)}
+        if bad:
+            raise ValueError(f"counter values must be numeric, got {bad!r}")
+        ev = {
+            "name": name,
+            "ph": "C",
+            "ts": round(self._now_us() if ts_us is None else float(ts_us), 3),
+            "pid": 0,
+            "tid": tid,
+            "args": {k: float(v) for k, v in values.items()},
+        }
+        self.marks.append(ev)
+        return ev
+
     # ------------------------------------------------------------- export --
     def to_chrome_trace(self) -> dict:
         """The ``{"traceEvents": [...]}`` dict Perfetto loads; events are
-        "complete" (``ph="X"``) spans sorted by timestamp."""
+        "complete" (``ph="X"``) spans sorted by timestamp, followed by
+        instant/counter marks sorted by (track, timestamp) — each track
+        stays monotonic in file order, which the validator checks."""
         events = [
             {
                 "name": sp.name,
@@ -106,6 +153,9 @@ class Tracer:
             # it shares a start timestamp with
             for sp in sorted(self.spans, key=lambda s: (s.ts_us, -s.dur_us))
         ]
+        events.extend(
+            sorted(self.marks, key=lambda ev: (ev.get("tid", 0), ev["ts"]))
+        )
         return {"traceEvents": events, "displayTimeUnit": "ms"}
 
     def write(self, path: str) -> None:
@@ -158,6 +208,15 @@ def validate_chrome_trace(data: Any) -> list[str]:
     nesting — any two spans on a track are disjoint or one contains the
     other (a span that straddles another's boundary renders as garbage
     in Perfetto and means a start/stop was dropped).
+
+    Beyond ``ph:"X"`` spans, instant events (``ph:"i"``, the anomaly
+    markers) must carry a valid scope (``s`` in ``t``/``p``/``g`` when
+    present) and counter samples (``ph:"C"``) a non-empty all-numeric
+    ``args`` mapping — Perfetto silently drops malformed ones, which
+    would make a missing anomaly marker look like a clean run. Both
+    participate in the per-track timestamp monotonicity check (they are
+    timestamped points on their track) but not in the nesting sweep
+    (they have no extent).
     """
     errors: list[str] = []
     if isinstance(data, dict):
@@ -169,7 +228,8 @@ def validate_chrome_trace(data: Any) -> list[str]:
     else:
         return [f"trace must be a dict or list, got {type(data).__name__}"]
 
-    tracks: dict[tuple, list[tuple[float, float, str]]] = {}
+    # (ts, dur, name, ph) per track; ph "i"/"C" are zero-extent points
+    tracks: dict[tuple, list[tuple[float, float, str, str]]] = {}
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
             errors.append(f"event #{i} is not an object")
@@ -180,32 +240,60 @@ def validate_chrome_trace(data: Any) -> list[str]:
         if ph not in ("X", "M", "i", "C"):
             errors.append(f"event #{i} ({ev.get('name')!r}): unsupported ph {ph!r}")
             continue
+        if ph == "M":  # metadata events carry no timeline position
+            continue
         ts = ev.get("ts")
         if not isinstance(ts, (int, float)) or ts < 0:
             errors.append(f"event #{i} ({ev.get('name')!r}): bad ts {ts!r}")
             continue
-        if ph != "X":
-            continue
-        dur = ev.get("dur", 0)
+        if ph == "i":
+            scope = ev.get("s", "t")
+            if scope not in ("t", "p", "g"):
+                errors.append(
+                    f"event #{i} ({ev.get('name')!r}): instant scope 's' "
+                    f"must be 't', 'p' or 'g', got {scope!r}"
+                )
+                continue
+        if ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                errors.append(
+                    f"event #{i} ({ev.get('name')!r}): counter event needs a "
+                    f"non-empty 'args' mapping, got {args!r}"
+                )
+                continue
+            bad = {
+                k: v for k, v in args.items()
+                if not isinstance(v, (int, float)) or isinstance(v, bool)
+            }
+            if bad:
+                errors.append(
+                    f"event #{i} ({ev.get('name')!r}): counter values must "
+                    f"be numeric, got {bad!r}"
+                )
+                continue
+        dur = ev.get("dur", 0) if ph == "X" else 0
         if not isinstance(dur, (int, float)) or dur < 0:
             errors.append(f"event #{i} ({ev.get('name')!r}): bad dur {dur!r}")
             continue
         tracks.setdefault((ev.get("pid", 0), ev.get("tid", 0)), []).append(
-            (float(ts), float(dur), str(ev.get("name")))
+            (float(ts), float(dur), str(ev.get("name")), str(ph))
         )
 
     eps = 1e-3  # µs; round-off slack from export rounding
-    for (pid, tid), spans in tracks.items():
+    for (pid, tid), marks in tracks.items():
         last_ts = -1.0
-        for ts, _dur, name in spans:
+        for ts, _dur, name, _ph in marks:
             if ts + eps < last_ts:
                 errors.append(
-                    f"track pid={pid} tid={tid}: non-monotonic ts at span "
+                    f"track pid={pid} tid={tid}: non-monotonic ts at event "
                     f"{name!r} ({ts} after {last_ts})"
                 )
             last_ts = max(last_ts, ts)
         # nesting sweep: sorted by (start, -dur), an open span's end must
-        # contain every span that starts before it ends
+        # contain every span that starts before it ends; instant/counter
+        # points have no extent and stay out of the sweep
+        spans = [(ts, dur, name) for ts, dur, name, ph in marks if ph == "X"]
         stack: list[tuple[float, str]] = []  # (end, name)
         for ts, dur, name in sorted(spans, key=lambda s: (s[0], -s[1])):
             while stack and stack[-1][0] <= ts + eps:

@@ -1,0 +1,338 @@
+"""Streaming observability: windowed stream, detectors, SLO monitor,
+and the scheduler's monitored hot-swap loop.
+
+Four layers, mirroring the package split:
+
+* **stream** — ``WindowedStream`` closes fixed-width windows with
+  mean/peak depths and per-window *deltas* of the cumulative counters,
+  forwards node/finish events, and validates its width;
+* **anomaly** — the EWMA spike and CUSUM drift state machines on
+  hand-built windows (onset pinning, one event per excursion, re-arm),
+  plus the suite's merge order and mid-run subscription;
+* **slo** — finish-via-sinks, fluid projection going red, ranked blame,
+  and the end-of-run closeout of never-finished targets;
+* **integration** — observers ride both engines with identical
+  makespans (and bypass the plan memo), ``CostModel`` validates the
+  telemetry knobs, and ``p4mr.Scheduler(monitor=True)`` surfaces
+  anomalies/SLO statuses while ``monitor=False`` restores the
+  threshold-only behavior.
+"""
+import pytest
+
+from repro import p4mr
+from repro.compiler.cost import CostModel
+from repro.compiler.simulator import ENGINES
+from repro.core import topology
+from repro.telemetry import (
+    CusumDetector,
+    DetectorSuite,
+    EwmaDetector,
+    SloMonitor,
+    SloTarget,
+    Window,
+    WindowedStream,
+    WindowRecorder,
+    default_detectors,
+)
+
+
+def _win(index, start, end, *, peak=None, mean=None, drops=None,
+         blocked=None, served=None, port_peak=None, samples=1):
+    """Hand-built window for driving detector/monitor state machines."""
+    return Window(
+        index=index, start_tick=start, end_tick=end, engine="test",
+        samples=samples,
+        switch_depth_mean=mean or {},
+        switch_depth_peak=peak or {},
+        port_depth_peak=port_peak or {},
+        port_drops=drops or {},
+        port_blocked=blocked or {},
+        switch_served=served or {},
+    )
+
+
+def _tenant(name, hosts, sink, vocab=64):
+    job = p4mr.job(name)
+    keyed = [job.store(f"s{i}", host=h, items=vocab).key_by(4)
+             for i, h in enumerate(hosts)]
+    keyed[0].reduce("SUM", *keyed[1:], label="R").collect(sink, label="OUT")
+    return job
+
+
+# ------------------------------------------------------------------ stream --
+def test_windowed_stream_validates_width():
+    for bad in (0.0, -16.0):
+        with pytest.raises(ValueError, match="window_ticks"):
+            WindowedStream([], window_ticks=bad)
+
+
+def test_windowed_stream_closes_windows_with_means_peaks_and_deltas():
+    rec = WindowRecorder()
+    stream = WindowedStream([rec], window_ticks=10.0, engine="event")
+    stream.add_sample(2.0, {"A": 4.0}, None, {("A", "B"): 3.0}, None, {"A": 2.0})
+    stream.add_sample(6.0, {"A": 8.0, "B": 1.0})
+    assert rec.windows == []  # nothing closed yet
+    # a sample past the boundary closes [0, 10) first, then lands in [10, 20)
+    stream.add_sample(12.0, {"A": 2.0}, None, {("A", "B"): 5.0}, None, {"A": 9.0})
+    assert len(rec.windows) == 1
+    w0 = rec.windows[0]
+    assert (w0.index, w0.start_tick, w0.end_tick, w0.samples) == (0, 0.0, 10.0, 2)
+    assert w0.engine == "event" and w0.duration_ticks == 10.0
+    assert w0.switch_depth_mean["A"] == pytest.approx(6.0)  # (4 + 8) / 2
+    assert w0.switch_depth_peak == {"A": 8.0, "B": 1.0}
+    assert w0.port_drops == {("A", "B"): 3.0}  # delta vs empty snapshot
+    assert w0.switch_served == {"A": 2.0}
+    # finish flushes the trailing partial window with *deltas*, then the
+    # on_finish hook fires; a second finish is a no-op
+    stream.finish(15.0)
+    stream.finish(15.0)
+    assert rec.makespan == 15.0 and len(rec.windows) == 2
+    w1 = rec.windows[1]
+    assert (w1.start_tick, w1.end_tick) == (10.0, 15.0)
+    assert w1.port_drops == {("A", "B"): 2.0}  # 5 cumulative − 3 snapshot
+    assert w1.switch_served == {"A": 7.0}  # 9 − 2
+    # window pressure is the depth integral slice: mean × duration
+    assert w0.pressure()["A"] == pytest.approx(60.0)
+    assert w0.total_depth_peak == pytest.approx(9.0)
+    assert w1.utilization("A") == pytest.approx(7.0 / 5.0)
+
+
+def test_windowed_stream_forwards_node_events():
+    rec = WindowRecorder()
+    stream = WindowedStream([rec, None], window_ticks=8.0)  # None filtered
+    stream.on_node("wc/OUT", 17.5)
+    stream.finish(20.0)
+    assert rec.nodes == [("wc/OUT", 17.5)]
+    assert rec.makespan == 20.0
+
+
+# ----------------------------------------------------------------- cost --
+def test_cost_model_validates_telemetry_knobs():
+    with pytest.raises(ValueError, match="sim_telemetry_interval"):
+        CostModel(sim_telemetry_interval=0.0)
+    with pytest.raises(ValueError, match="sim_telemetry_window"):
+        CostModel(sim_telemetry_window=-4.0)
+    cm = CostModel(sim_telemetry_interval=2.0, sim_telemetry_window=8.0)
+    assert cm.sim_telemetry_window == 8.0
+
+
+# --------------------------------------------------------------- anomaly --
+def test_ewma_detector_fires_once_per_excursion_and_rearms():
+    det = EwmaDetector("drop-spike", lambda w: w.port_drops, ratio=4.0,
+                       min_value=1.0, switch_of=lambda p: p[0],
+                       port_of=lambda p: p)
+    p = ("E0", "A0")
+    for i in range(4):  # quiet baseline ~1 drop/window
+        det.on_window(_win(i, i * 10.0, (i + 1) * 10.0, drops={p: 1.0}))
+    assert det.events == []
+    det.on_window(_win(4, 40.0, 50.0, drops={p: 20.0}))  # spike
+    det.on_window(_win(5, 50.0, 60.0, drops={p: 20.0}))  # still spiking
+    assert len(det.events) == 1  # one event per excursion, no storm
+    ev = det.events[0]
+    assert (ev.kind, ev.detector) == ("drop-spike", "ewma")
+    assert (ev.switch, ev.port) == ("E0", p)
+    assert (ev.onset_tick, ev.detect_tick) == (40.0, 50.0)
+    assert ev.severity >= 1.0 and ev.window_index == 4
+    # back to quiet re-arms; a later spike is a fresh event
+    det.on_window(_win(6, 60.0, 70.0, drops={p: 1.0}))
+    det.on_window(_win(7, 70.0, 80.0, drops={p: 30.0}))
+    assert len(det.events) == 2 and det.events[1].onset_tick == 70.0
+
+
+def test_ewma_seeds_at_zero_so_first_window_burst_alarms():
+    # sparse signals (a port appears the first window it drops): the
+    # baseline must not teach itself the burst
+    det = EwmaDetector("drop-spike", lambda w: w.port_drops, ratio=4.0,
+                       min_value=1.0, port_of=lambda p: p)
+    det.on_window(_win(0, 0.0, 10.0, drops={("E0", "A0"): 12.0}))
+    assert len(det.events) == 1 and det.events[0].onset_tick == 0.0
+
+
+def test_cusum_detector_pins_onset_windows_before_detection():
+    det = CusumDetector("queue-growth", lambda w: w.switch_depth_peak,
+                        threshold=10.0, slack=1.0)
+    det.on_window(_win(0, 0.0, 10.0, peak={"A": 5.0}))  # seeds baseline
+    det.on_window(_win(1, 10.0, 20.0, peak={"A": 5.0}))  # drift ≤ 0
+    assert det.events == []
+    # +4 drift per window: the sum crosses 10 on the third hot window,
+    # but the onset is pinned where the drift run opened
+    for i, start in ((2, 20.0), (3, 30.0), (4, 40.0)):
+        det.on_window(_win(i, start, start + 10.0, peak={"A": 10.0}))
+    assert len(det.events) == 1
+    ev = det.events[0]
+    assert (ev.kind, ev.detector) == ("queue-growth", "cusum")
+    assert ev.onset_tick == 20.0 and ev.detect_tick == 50.0
+    assert ev.detection_latency_ticks == pytest.approx(30.0)
+    # the sustained excursion stays alarmed — no second event until the
+    # sum drains back to zero
+    det.on_window(_win(5, 50.0, 60.0, peak={"A": 10.0}))
+    assert len(det.events) == 1
+
+
+def test_detector_suite_merges_orders_and_subscribes_midrun():
+    suite = DetectorSuite([
+        CusumDetector("queue-growth", lambda w: w.switch_depth_peak,
+                      threshold=5.0, slack=0.0),
+        EwmaDetector("drop-spike", lambda w: w.port_drops, ratio=2.0,
+                     min_value=1.0, switch_of=lambda p: p[0],
+                     port_of=lambda p: p),
+    ])
+    seen = []
+    suite.subscribe(seen.append)
+    suite.on_window(_win(0, 0.0, 10.0, peak={"A": 2.0}))
+    suite.on_window(_win(1, 10.0, 20.0, peak={"A": 10.0},
+                         drops={("B", "C"): 6.0}))
+    assert len(seen) >= 1  # callback saw events the window they closed
+    kinds = {e.kind for e in suite.events}
+    assert "drop-spike" in kinds
+    evs = suite.events
+    assert list(evs) == sorted(
+        evs, key=lambda e: (e.detect_tick, e.onset_tick, e.kind, str(e.switch))
+    )
+    assert set(seen) == set(evs)
+    lat = suite.latency_by_kind()
+    assert all(v >= 0.0 for v in lat.values()) and set(lat) == kinds
+
+
+def test_default_detectors_cover_the_four_failure_modes():
+    suite = default_detectors()
+    assert {d.kind for d in suite.detectors} == {
+        "queue-growth", "drop-spike", "hol-blocking", "utilization-collapse"
+    }
+    # the collapse detector only fires with standing backlog (the guard):
+    # an idle switch serving nothing is idle, not collapsed
+    def collapse_det():
+        suite2 = default_detectors(collapse_ratio=0.5, min_backlog=2.0)
+        det = next(d for d in suite2.detectors
+                   if d.kind == "utilization-collapse")
+        for i in range(3):  # healthy: serving ~1 pkt/tick
+            det.on_window(_win(i, i * 10.0, (i + 1) * 10.0,
+                               served={"A": 10.0}, peak={"A": 5.0}))
+        return det
+
+    idle = collapse_det()
+    idle.on_window(_win(3, 30.0, 40.0, served={"A": 0.5}, peak={"A": 0.0}))
+    assert idle.events == []  # no backlog → guard holds fire
+    stuck = collapse_det()
+    stuck.on_window(_win(3, 30.0, 40.0, served={"A": 0.5}, peak={"A": 5.0}))
+    assert [e.kind for e in stuck.events] == ["utilization-collapse"]
+
+
+# ------------------------------------------------------------------- slo --
+def test_slo_monitor_rejects_duplicate_targets():
+    with pytest.raises(ValueError, match="duplicate"):
+        SloMonitor([SloTarget("a", sinks=("a/OUT",)),
+                    SloTarget("a", sinks=("a/X",))])
+
+
+def test_slo_monitor_finishes_jobs_via_sink_completion():
+    mon = SloMonitor([
+        SloTarget("a", deadline_ticks=50.0, sinks=("a/OUT1", "a/OUT2")),
+        SloTarget("b", deadline_ticks=10.0, sinks=("b/OUT",)),
+    ])
+    mon.on_node("a/OUT1", 30.0)
+    assert not mon.status("a").finished  # one sink still pending
+    mon.on_node("unrelated", 35.0)  # not a registered sink: ignored
+    mon.on_node("a/OUT2", 42.0)
+    st = mon.status("a")
+    assert st.finished and st.finish_tick == 42.0
+    assert not st.violated and st.margin_ticks == pytest.approx(8.0)
+    # a target whose sinks never complete closes with the run — late
+    mon.on_finish(80.0)
+    stb = mon.status("b")
+    assert stb.finished and stb.finish_tick == 80.0
+    assert stb.violated and stb.margin_ticks == pytest.approx(-70.0)
+    assert [v.job for v in mon.violations()] == ["b"]
+
+
+def test_slo_monitor_projects_risk_and_ranks_blame():
+    mon = SloMonitor([SloTarget("a", deadline_ticks=100.0, sinks=("a/OUT",))])
+    # healthy window: small backlog, fast drain → projection is green
+    mon.on_window(_win(0, 0.0, 10.0, mean={"A": 2.0}, served={"A": 10.0}))
+    st = mon.status("a")
+    assert not st.at_risk and st.projected_finish_tick == pytest.approx(12.0)
+    # deep backlog, slow measured drain → projection crosses the deadline:
+    # at_risk pins the red window and ranks the blamed switches hottest-first
+    mon.on_window(_win(1, 10.0, 20.0, mean={"A": 90.0, "B": 5.0},
+                       served={"A": 1.0}))
+    st = mon.status("a")
+    assert st.at_risk and st.violated and st.risk_onset_tick == 20.0
+    assert st.hot_switches[0] == "A"
+    assert st.margin_ticks is not None and st.margin_ticks < 0
+    assert mon.pressure()["A"] == pytest.approx(2.0 * 10 + 90.0 * 10)
+    # finishing in time clears the projection: the final verdict is real
+    mon.on_node("a/OUT", 60.0)
+    mon.on_finish(60.0)
+    st = mon.status("a")
+    assert st.finished and not st.violated and st.at_risk  # flag is history
+
+
+# ------------------------------------------------------------ integration --
+@pytest.mark.parametrize("engine", ENGINES)
+def test_observers_ride_both_engines_without_changing_results(engine):
+    sess = p4mr.Session(
+        topology.fat_tree_topology(4),
+        cost_model=CostModel(sim_telemetry_interval=4.0,
+                             sim_telemetry_window=16.0),
+    )
+    plan = sess.compile(_tenant("wc", [f"h{i}" for i in range(4)], "h15"))
+    base = plan.simulate_timing(engine=engine)
+    rec = WindowRecorder()
+    rep = plan.simulate_timing(engine=engine, observers=[rec])
+    # observation is free of Heisenberg effects: identical makespan
+    assert rep.makespan_ticks == base.makespan_ticks
+    assert rec.makespan == rep.makespan_ticks
+    assert rec.windows and rec.windows[0].engine == engine
+    assert sum(w.total_served for w in rec.windows) > 0
+    # windows tile the run: contiguous, fixed width except the last
+    for prev, cur in zip(rec.windows, rec.windows[1:]):
+        assert cur.start_tick == prev.end_tick
+    assert all(w.duration_ticks == 16.0 for w in rec.windows[:-1])
+    # node completions stream through, sinks included
+    assert any(label == "OUT" for label, _ in rec.nodes)
+    # observers force collection even though sim_telemetry is off, and
+    # bypass the memo: the plain path still returns the cached report
+    assert plan.simulate_timing(engine=engine).timeline is None
+
+
+def test_scheduler_monitored_hot_swap_surfaces_anomalies_and_slos():
+    def make_sess():
+        return p4mr.Session(
+            topology.fat_tree_topology(4),
+            cost_model=CostModel(sim_telemetry_interval=4.0,
+                                 sim_telemetry_window=16.0),
+        )
+
+    def submit_all(sched):
+        sched.submit(_tenant("a", [f"h{i}" for i in range(4)], "h15"),
+                     name="a", deadline=400.0)
+        sched.submit(_tenant("b", [f"h{i}" for i in range(4, 8)], "h12"),
+                     name="b", at=40.0)
+
+    sched = p4mr.Scheduler(
+        make_sess(), reroute_rounds=0, retune_rounds=1,
+        detectors=lambda: default_detectors(queue_threshold=4.0),
+    )
+    submit_all(sched)
+    rep = sched.run()
+    assert rep.anomalies  # the merged bursty run trips the tight suite
+    assert all(e.detection_latency_ticks >= 0.0 for e in rep.anomalies)
+    assert set(rep.slo_statuses) == {"a", "b"}
+    assert all(st.finished for st in rep.slo_statuses.values())
+    assert "anomaly event(s)" in rep.summary()
+    for swap in rep.hot_swaps:
+        assert swap.trigger in ("anomaly", "drift")
+        if swap.trigger == "anomaly":
+            assert swap.anomaly and swap.onset_tick is not None
+            assert swap.detection_latency_ticks >= 0.0
+        else:
+            assert swap.anomaly == "" and swap.onset_tick is None
+
+    # monitor=False restores the threshold-only behavior: no streaming
+    # products on the report
+    plain = p4mr.Scheduler(make_sess(), reroute_rounds=0, retune_rounds=1,
+                           monitor=False)
+    submit_all(plain)
+    rep2 = plain.run()
+    assert rep2.anomalies == () and rep2.slo_statuses == {}
+    assert all(s.trigger == "drift" for s in rep2.hot_swaps)

@@ -24,17 +24,21 @@ from repro.core import topology, wordcount
 from repro.telemetry import (
     MetricsRegistry,
     Telemetry,
+    Timeline,
     Tracer,
     activate,
     current_tracer,
     hottest,
     link_pressure,
     maybe_span,
+    measured_switch_pressure,
     normalized,
     rank_cold,
     rank_hot,
     switch_pressure,
+    timeline_pressure,
     validate_chrome_trace,
+    verify_timeline,
 )
 from repro.telemetry import report as tel_report
 
@@ -103,6 +107,63 @@ def test_validator_rejects_malformed_traces():
     ]}) == []
 
 
+def test_tracer_instant_and_counter_marks():
+    tr = Tracer()
+    with pytest.raises(ValueError, match="scope"):
+        tr.instant("bad", scope="x")
+    with pytest.raises(ValueError, match="at least one value"):
+        tr.counter("empty", values={})
+    with pytest.raises(ValueError, match="numeric"):
+        tr.counter("strs", values={"depth": "deep"})
+    with pytest.raises(ValueError, match="numeric"):
+        tr.counter("bools", values={"depth": True})  # bool is not a number
+
+    with tr.span("run"):
+        pass
+    tr.counter("fabric.queue_depth", ts_us=16.0,
+               values={"mean_pkts": 2.5, "peak_pkts": 7}, tid=1)
+    tr.instant("anomaly.queue-growth", ts_us=48.0, tid=1,
+               switch="E0_0", onset_tick=32.0)
+    trace = tr.to_chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    by_ph = {e["ph"]: e for e in trace["traceEvents"]}
+    assert by_ph["i"]["s"] == "t" and by_ph["i"]["tid"] == 1
+    assert by_ph["i"]["args"]["switch"] == "E0_0"
+    assert by_ph["C"]["args"] == {"mean_pkts": 2.5, "peak_pkts": 7.0}
+    # marks live on their own track, sorted by (tid, ts) after the spans
+    assert [e["ph"] for e in trace["traceEvents"]] == ["X", "C", "i"]
+
+
+def test_validator_rejects_malformed_instant_and_counter_events():
+    # a bad instant scope is rejected; the default (absent "s") is fine
+    errs = validate_chrome_trace({"traceEvents": [
+        {"name": "a", "ph": "i", "ts": 1, "s": "z"},
+    ]})
+    assert any("scope" in e for e in errs)
+    assert validate_chrome_trace({"traceEvents": [
+        {"name": "a", "ph": "i", "ts": 1},
+    ]}) == []
+    # counter events need a non-empty all-numeric args mapping
+    for args in (None, {}, {"depth": "deep"}, {"depth": True}):
+        errs = validate_chrome_trace({"traceEvents": [
+            {"name": "c", "ph": "C", "ts": 1, "args": args},
+        ]})
+        assert errs and all("counter" in e for e in errs)
+    # i/C marks join the per-track monotonicity check
+    errs = validate_chrome_trace({"traceEvents": [
+        {"name": "c", "ph": "C", "ts": 50, "args": {"v": 1}, "tid": 1},
+        {"name": "a", "ph": "i", "ts": 10, "tid": 1},
+    ]})
+    assert any("non-monotonic" in e for e in errs)
+    # ...but not the span nesting sweep: a mark inside a span is fine,
+    # and marks on a separate track never interleave with wall spans
+    assert validate_chrome_trace({"traceEvents": [
+        {"name": "outer", "ph": "X", "ts": 0, "dur": 100},
+        {"name": "m", "ph": "i", "ts": 40},
+        {"name": "c", "ph": "C", "ts": 60, "args": {"v": 1}},
+    ]}) == []
+
+
 # ---------------------------------------------------------------- metrics --
 def test_metrics_registry_instruments_and_roundtrip(tmp_path):
     reg = MetricsRegistry()
@@ -158,6 +219,34 @@ def test_sparkline_downsamples_to_width():
     assert line[-1] == "█"  # max lands in the last bucket
 
 
+def test_report_renders_anomaly_and_slo_panel():
+    # the registry shape Telemetry.record_anomalies / record_slo produce
+    reg = MetricsRegistry()
+    reg.counter("anomaly.events").inc(3)
+    reg.table("anomaly.by_kind").add("queue-growth", 2)
+    reg.table("anomaly.by_kind").add("drop-spike", 1)
+    reg.table("anomaly.by_switch").add("A1_1", 3)
+    for lat in (64.0, 64.0, 32.0):
+        reg.histogram("anomaly.detection_latency_ticks").observe(lat)
+    reg.gauge("slo.heavy.margin_ticks").set(-120.0)
+    reg.gauge("slo.burst.margin_ticks").set(35.0)
+    reg.counter("slo.violations").inc()
+    reg.table("slo.hot_switches").add("A1_1", 1)
+    out = tel_report.render(reg.to_dict())
+    assert "== anomalies (3 events) ==" in out
+    assert "queue-growth" in out and "x2" in out
+    assert "detection latency" in out and "implicated switches: A1_1 (x3)" in out
+    assert "== SLO margins (1 violations) ==" in out
+    panel = out[out.index("== SLO margins"):].splitlines()
+    heavy_line = next(ln for ln in panel if "heavy" in ln)
+    assert "-120" in heavy_line and "MISS" in heavy_line
+    burst_line = next(ln for ln in panel if "burst" in ln)
+    assert "+35" in burst_line and "ok" in burst_line
+    assert "blamed hot switches: A1_1 (x1)" in out
+    # margins render worst-first
+    assert panel.index(heavy_line) < panel.index(burst_line)
+
+
 # ----------------------------------------------------------------- fabric --
 class _FakeReport:
     """Just the pressure-relevant slice of a SimReport."""
@@ -197,6 +286,82 @@ def test_rank_helpers_have_deterministic_tie_order():
     assert hottest({}) is None
     # coldest-first over explicit keys; missing keys count as zero
     assert rank_cold(pressure, ["s1", "s2", "absent"]) == ["absent", "s2", "s1"]
+
+
+def _timeline(*, ticks=(), switch_depth=None, cum_drops=None,
+              port_packets=None, interval=4.0, hop_records=()):
+    return Timeline(
+        engine="event", interval_ticks=interval, ticks=tuple(ticks),
+        switch_depth=switch_depth or {}, port_depth={},
+        port_cum_drops=cum_drops or {}, port_cum_blocked={},
+        port_packets=port_packets or {}, hop_records=hop_records,
+    )
+
+
+def test_timeline_pressure_edge_cases():
+    # telemetry off (no timeline) and an empty sample grid are both quiet
+    assert timeline_pressure(None) == {}
+    assert timeline_pressure(_timeline()) == {}
+    # an all-zero series contributes nothing (no phantom hot switches)
+    assert timeline_pressure(
+        _timeline(ticks=(4.0, 8.0), switch_depth={"E0": (0.0, 0.0)})
+    ) == {}
+    # single-hop flow: one switch ever queued — the integral is Σ depth ×
+    # interval for that switch alone
+    tl = _timeline(ticks=(4.0, 8.0, 12.0),
+                   switch_depth={"E0": (2.0, 4.0, 0.0)})
+    assert timeline_pressure(tl) == {"E0": pytest.approx(24.0)}
+    # measured_switch_pressure folds the integral into the queue counts —
+    # and degrades to plain switch_pressure when the report has none
+    rep = _FakeReport(queued={"E0": 3, "A1": 1})
+    assert measured_switch_pressure(rep) == {"E0": 3.0, "A1": 1.0}
+    rep.timeline = tl
+    assert measured_switch_pressure(rep) == {"E0": 27.0, "A1": 1.0}
+
+
+def test_verify_timeline_raises_on_series_counter_disagreement():
+    p = ("E0", "A0")
+
+    class _Rep:
+        def __init__(self, tl, *, drops=None, hops=10, recirc=0):
+            self.timeline = tl
+            self.port_drops = drops or {}
+            self.packet_hops = hops
+            self.recirculations = recirc
+
+    # no timeline (telemetry off): reconciliation is a no-op
+    verify_timeline(_Rep(None))
+    # consistent run passes: final drop sample == counter, packets add up
+    ok = _Rep(
+        _timeline(ticks=(4.0,), cum_drops={p: (3.0,)},
+                  port_packets={p: 6.0, ("A0", "C0"): 4.0}),
+        drops={p: 3.0},
+    )
+    verify_timeline(ok)
+    # the cumulative drop series disagreeing with the report counter is a
+    # collector/engine divergence — pinned behavior: raise, not reconcile
+    bad_drops = _Rep(
+        _timeline(ticks=(4.0,), cum_drops={p: (3.0,)},
+                  port_packets={p: 6.0, ("A0", "C0"): 4.0}),
+        drops={p: 9.0},
+    )
+    with pytest.raises(ValueError, match="drop mismatch"):
+        verify_timeline(bad_drops)
+    # a drop column the report never counted (or vice versa) also raises
+    with pytest.raises(ValueError, match="drop mismatch"):
+        verify_timeline(_Rep(
+            _timeline(ticks=(4.0,), cum_drops={p: (2.0,)},
+                      port_packets={p: 10.0}),
+        ))
+    # port_packets must account for packet_hops + recirculations
+    with pytest.raises(ValueError, match="packet mismatch"):
+        verify_timeline(_Rep(
+            _timeline(ticks=(4.0,), port_packets={p: 6.0}), hops=10,
+        ))
+    # the tolerance absorbs sub-packet sampling slack, nothing more
+    verify_timeline(_Rep(
+        _timeline(ticks=(4.0,), port_packets={p: 10.4}), hops=10,
+    ))
 
 
 def test_hot_switch_and_hot_bucket_use_unified_tie_break():
