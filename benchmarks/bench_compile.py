@@ -49,6 +49,18 @@ def _case(name: str, program_or_src, topo, inputs) -> dict:
     sim = plan.simulate(inputs)
     sim_flat = flat.simulate(inputs)
     feedback = sess.compile(program_or_src, name="feedback")  # full default pipeline
+    # the always-on verify pass must stay in the noise of a compile: its
+    # recorded pass wall time is capped at 5% of the default pipeline's
+    # (measured on the feedback plan — ``best`` may win with the short
+    # unoptimized pipeline, where any fixed cost is a large share)
+    timings = feedback.pass_timings_us()
+    verify_wall_us = timings.get("verify", 0.0)
+    pipeline_wall_us = sum(timings.values()) or 1.0
+    assert verify_wall_us < 0.05 * pipeline_wall_us, (
+        f"{name}: verify pass took {verify_wall_us:.0f}us of the "
+        f"{pipeline_wall_us:.0f}us default pipeline "
+        f"({100.0 * verify_wall_us / pipeline_wall_us:.1f}%, cap 5%)"
+    )
     sim_static = static.simulate_timing()
     sim_feedback = feedback.simulate_timing()
     return {
@@ -58,6 +70,7 @@ def _case(name: str, program_or_src, topo, inputs) -> dict:
         "optimized": len(plan.program) != len(flat.program)
         or plan.cost.scalar != flat.cost.scalar,
         "compile_us": round(compile_us, 2),
+        "verify_wall_us": round(verify_wall_us, 2),
         "simulate_us": round(simulate_us, 2),
         "sim_time_best_us": round(sim.report.time_s * 1e6, 4),
         "sim_time_flat_us": round(sim_flat.report.time_s * 1e6, 4),
@@ -144,7 +157,7 @@ def run() -> list[tuple[str, float, str]]:
             continue
         rows.append((
             f"compile.{r['name']}", r["compile_us"],
-            f"simulate={r['simulate_us']:.0f}us "
+            f"verify={r['verify_wall_us']:.0f}us simulate={r['simulate_us']:.0f}us "
             f"sim_best={r['sim_time_best_us']}us sim_flat={r['sim_time_flat_us']}us "
             f"speedup={r['speedup']}x hops={r['hops_best']}/{r['hops_flat']} "
             f"makespan_static/feedback={r['makespan_ticks_static']}/"

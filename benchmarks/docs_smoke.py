@@ -91,7 +91,7 @@ def main() -> int:
         return 1
     n_files = len(_doc_files())
     print(f"ok: links resolve across {n_files} markdown file(s)")
-    for doc in ("docs/p4mr.md", "docs/telemetry.md"):
+    for doc in ("docs/p4mr.md", "docs/telemetry.md", "docs/verify.md"):
         n = run_snippets(doc)
         print(f"OK: {n} snippet block(s) from {doc} ran clean")
     return 0

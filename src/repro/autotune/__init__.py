@@ -59,6 +59,8 @@ def tune(
     rounds for convergence speed; ``actions`` restricts the families
     (e.g. ``("reroute",)`` for a routes-only search).
     """
+    from repro import verify as _verify  # lazy: verify registers a pass too
+
     initial = plan.simulate_timing()
     makespans: dict[int, int] = {}
     # cached records never rebuild the plan, so their makespan comes from
@@ -72,6 +74,24 @@ def tune(
     def objective(pl: CompiledPlan) -> float:
         return pl.simulate_timing().time_s
 
+    def _verified(c: Candidate) -> Candidate:
+        """Post-mutation hook: a candidate that breaks a static invariant
+        (error-severity diagnostics) is skipped, never simulated or
+        accepted — the search cannot trade correctness for makespan."""
+        build = c.build
+
+        def checked() -> CompiledPlan:
+            pl = build()
+            diags = _verify.verify_plan(pl)
+            errs = _verify.errors_of(diags)
+            if errs:
+                more = f" (+{len(errs) - 1} more)" if len(errs) > 1 else ""
+                raise SkipCandidate(f"verify: {errs[0].format()}{more}")
+            pl.diagnostics = tuple(diags)
+            return pl
+
+        return dataclasses.replace(c, build=checked)
+
     def observe(rec: EvalRecord, pl: CompiledPlan) -> None:
         ticks = pl.simulate_timing().makespan_ticks
         makespans[id(rec)] = ticks
@@ -81,7 +101,7 @@ def tune(
     best, _, records = hill_climb(
         plan,
         objective=objective,
-        propose=lambda pl, _round: propose(pl, actions),
+        propose=lambda pl, _round: [_verified(c) for c in propose(pl, actions)],
         rounds=rounds,
         min_gain=min_gain,
         on_eval=observe,
@@ -102,6 +122,7 @@ def tune(
             for r in records
             if r.score is not None and not r.cached and r.cache_key is not None
         ),
+        verify_rejections=sum(1 for r in records if r.note.startswith("verify:")),
         actions=[
             TunedAction(
                 round=r.round,

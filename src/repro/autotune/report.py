@@ -44,6 +44,9 @@ class TuningReport:
     # hits are re-proposed mutations whose recompile+simulate was skipped
     cache_hits: int = 0
     cache_misses: int = 0
+    # candidates whose mutation broke a static invariant (repro.verify
+    # found error-severity diagnostics) and were rejected unevaluated
+    verify_rejections: int = 0
 
     @property
     def cache_hit_rate(self) -> float:
@@ -82,6 +85,7 @@ class TuningReport:
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "cache_hit_rate": round(self.cache_hit_rate, 3),
+            "verify_rejections": self.verify_rejections,
             "actions": [
                 {
                     "round": a.round,
@@ -109,8 +113,13 @@ class TuningReport:
             if self.cache_hits
             else ""
         )
+        vetoed = (
+            f", {self.verify_rejections} verify-rejected"
+            if self.verify_rejections
+            else ""
+        )
         return (
             f"{len(self.accepted)}/{len(self.actions)} action(s) accepted [{kinds}], "
             f"makespan {self.initial_makespan_ticks}→{self.final_makespan_ticks} ticks "
-            f"({self.improvement_pct:+.1f}%){cache}"
+            f"({self.improvement_pct:+.1f}%){cache}{vetoed}"
         )

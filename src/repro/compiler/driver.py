@@ -68,6 +68,8 @@ def _ensure_builtin_passes() -> None:
         import repro.shuffle.lower  # noqa: F401
     if "autotune" not in _PASS_REGISTRY:
         import repro.autotune  # noqa: F401
+    if "verify" not in _PASS_REGISTRY:
+        import repro.verify  # noqa: F401
 
 
 # The full optimizing pipeline and the paper-faithful flat baseline.
@@ -82,6 +84,7 @@ DEFAULT_PASSES: tuple[str, ...] = (
     "route",
     "reroute-feedback",
     "emit",
+    "verify",
 )
 # DEFAULT_PASSES without the measured-queueing reroute loop: routes stay
 # on the static route-count ECMP tie-break. The benchmarks compile under
@@ -89,7 +92,14 @@ DEFAULT_PASSES: tuple[str, ...] = (
 STATIC_ECMP_PASSES: tuple[str, ...] = tuple(
     p for p in DEFAULT_PASSES if p != "reroute-feedback"
 )
-UNOPTIMIZED_PASSES: tuple[str, ...] = ("parse", "validate", "place", "route", "emit")
+UNOPTIMIZED_PASSES: tuple[str, ...] = (
+    "parse",
+    "validate",
+    "place",
+    "route",
+    "emit",
+    "verify",
+)
 # DEFAULT_PASSES plus the profile-guided autotune search (repro.autotune):
 # the emitted plan is hill-climbed against the streaming simulator —
 # reroute (k-shortest-path detours), move-reducer, rebucket, reweight.

@@ -15,7 +15,7 @@ from typing import Hashable
 from repro.compiler.driver import CompileCtx, register_pass
 from repro.compiler.plan import CompiledPlan
 from repro.core import dag, dsl, primitives as prim
-from repro.core.placement import place as core_place
+from repro.core.placement import PlacementError, place as core_place
 from repro.core.routing import build_routes
 
 NodeId = Hashable
@@ -39,6 +39,15 @@ def _fresh(program: dag.Program, taken: set[str], base: str) -> str:
     return name
 
 
+def _verify_fail(code: str, msg: str, **loc) -> "Exception":
+    """One coded diagnostic as a raisable ``VerificationError`` — how the
+    passes report their own failures in the verifier's vocabulary
+    (satellite of repro.verify; parse keeps ``DSLSyntaxError``)."""
+    from repro.verify import Diagnostic, Severity, VerificationError
+
+    return VerificationError([Diagnostic(code, Severity.ERROR, msg, **loc)])
+
+
 # ---------------------------------------------------------------------------
 # frontend
 # ---------------------------------------------------------------------------
@@ -60,15 +69,20 @@ def parse_pass(ctx: CompileCtx) -> str:
 
 @register_pass("validate")
 def validate_pass(ctx: CompileCtx) -> str:
+    """Frontend validation as coded diagnostics, ALL collected in one run.
+
+    Structure (V101/V102/V106) plus host attachment against the target
+    topology (V110) — a program with three bad hosts reports all three,
+    not just the first. Deliberately no cost model: fan-in bounds (V103)
+    belong to the post-optimization ``verify`` pass, after
+    ``rebalance-reduce-tree`` has had its chance to fix wide reduces.
+    """
+    from repro.verify import VerificationError, errors_of, verify_program
+
     p = ctx.require_program()
-    p.validate()
-    # every referenced host must attach to the target topology — fail here
-    # with the topology's two-form KeyError, not deep inside placement
-    for n in p:
-        if isinstance(n, prim.Store):
-            ctx.topology.attach_switch(n.host)
-        elif isinstance(n, prim.Collect):
-            ctx.topology.attach_switch(n.sink_host)
+    diags = verify_program(p, topology=ctx.topology)
+    if errors_of(diags):
+        raise VerificationError(diags)
     return f"ok: {len(p)} nodes, depth {p.depth()}"
 
 
@@ -313,14 +327,18 @@ def insert_combiners_pass(ctx: CompileCtx) -> str:
 def place_pass(ctx: CompileCtx) -> str:
     p = ctx.require_program()
     cm = ctx.cost_model
-    ctx.placement = core_place(
-        p,
-        ctx.topology,
-        memory_budget_bytes=cm.switch_memory_bytes,
-        item_bytes=cm.item_bytes,
-        edge_cost=cm.edge_cost_fn(ctx.topology, cm.traffic(p)),
-        pins=ctx.pins,
-    )
+    try:
+        ctx.placement = core_place(
+            p,
+            ctx.topology,
+            memory_budget_bytes=cm.switch_memory_bytes,
+            item_bytes=cm.item_bytes,
+            edge_cost=cm.edge_cost_fn(ctx.topology, cm.traffic(p)),
+            pins=ctx.pins,
+        )
+    except PlacementError as e:
+        # memory-infeasible placement, in the verifier's vocabulary
+        raise _verify_fail("V205", str(e)) from e
     return f"total_hops={ctx.placement.total_hops:g}, pinned={len(ctx.pins)}"
 
 
@@ -336,7 +354,9 @@ def route_pass(ctx: CompileCtx) -> str:
     traffic — the p4mr scheduler's contention-aware compile hook.
     """
     if ctx.placement is None:
-        raise ValueError("route pass requires a placement (run 'place' first)")
+        raise _verify_fail(
+            "V001", "route pass requires a placement (run 'place' first)"
+        )
     seed = ctx.options.get("switch_penalty_seed") or None
     link_seed = ctx.options.get("link_penalty_seed") or None
     if seed or link_seed:
@@ -377,7 +397,9 @@ def reroute_feedback_pass(ctx: CompileCtx) -> str:
     the static-ECMP plan's.
     """
     if ctx.placement is None or ctx.routes is None:
-        raise ValueError("reroute-feedback requires routes (run 'route' first)")
+        raise _verify_fail(
+            "V001", "reroute-feedback requires routes (run 'route' first)"
+        )
     from repro.compiler.simulator import simulate_timing
 
     p = ctx.require_program()
@@ -449,7 +471,7 @@ def reroute_feedback_pass(ctx: CompileCtx) -> str:
 @register_pass("emit")
 def emit_pass(ctx: CompileCtx) -> str:
     if ctx.placement is None or ctx.routes is None:
-        raise ValueError("emit pass requires placement and routes")
+        raise _verify_fail("V001", "emit pass requires placement and routes")
     p = ctx.require_program()
     cost = ctx.cost_model.plan_cost(p, ctx.topology, ctx.placement, ctx.routes)
     ctx.plan = CompiledPlan(

@@ -50,6 +50,10 @@ class CompiledPlan:
     shuffle_meta: dict | None = None
     # TuningReport when repro.autotune produced this plan; None otherwise
     tuning: Any = None
+    # verifier output (repro.verify Diagnostic tuple) when the 'verify'
+    # pass (or check_plan) ran over this plan; None = never verified.
+    # An empty tuple means verified clean.
+    diagnostics: "tuple | None" = None
 
     @property
     def pass_records(self) -> tuple:

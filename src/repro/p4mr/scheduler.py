@@ -121,6 +121,9 @@ class ScheduleReport:
     hot_swaps: tuple[HotSwap, ...]
     deadline_miss_ticks: dict[str, int]  # late jobs only
     weighted_flow_ticks: float  # Σ weight · (finish − arrival)
+    # candidates (admission plans, fleet reroutes, hot-swap mutations)
+    # rejected because repro.verify found error-severity diagnostics
+    verify_rejections: int = 0
     # streaming-monitor products (empty when monitor=False / retune off):
     anomalies: tuple[Any, ...] = ()  # telemetry.anomaly.AnomalyEvent, merged
     slo_statuses: dict[str, Any] = dataclasses.field(  # job -> SloStatus
@@ -453,7 +456,25 @@ class Scheduler:
         by_name = {r.name: r for r in order}
 
         with sess._scope("session.schedule", jobs=len(order)) as scope_attrs:
-            # ---- phase A: online admission + contention-aware compile
+            # ---- phase A: online admission + contention-aware compile.
+            # every admitted/mutated plan must also pass the static
+            # verifier — the scheduler cannot install a plan the
+            # compiler's always-on 'verify' pass would have refused
+            from repro import verify as _vfy
+
+            def _verify_reason(pl) -> "str | None":
+                diags = (
+                    pl.diagnostics
+                    if pl.diagnostics is not None
+                    else _vfy.verify_plan(pl)
+                )
+                errs = _vfy.errors_of(diags)
+                if errs:
+                    more = f" (+{len(errs) - 1} more)" if len(errs) > 1 else ""
+                    return f"verify: {errs[0].format()}{more}"
+                return None
+
+            verify_rejections = 0
             admissions: list[Admission] = []
             plans: dict[str, Any] = {}  # scheduled configuration
             cold_plans: dict[str, Any] = {}  # the unscheduled merge
@@ -480,13 +501,19 @@ class Scheduler:
                         # headroom for arrivals not yet seen
                         if s_hot <= s_cold:
                             candidate, seeded = hot, True
-                reason = self.budget.check(candidate, plans, engine=eng)
+                reason = self.budget.check(
+                    candidate, plans, engine=eng
+                ) or _verify_reason(candidate)
                 if reason is not None and seeded:
                     # the seeded compile may have placed state differently;
                     # give the cold plan its own chance before rejecting
                     candidate, seeded = cold, False
-                    reason = self.budget.check(candidate, plans, engine=eng)
+                    reason = self.budget.check(
+                        candidate, plans, engine=eng
+                    ) or _verify_reason(candidate)
                 if reason is not None:
+                    if reason.startswith("verify:"):
+                        verify_rejections += 1
                     admissions.append(Admission(req.name, False, reason))
                     continue
                 plans[req.name] = candidate
@@ -535,14 +562,20 @@ class Scheduler:
                     if [r.path for r in routes.routes] != [
                         r.path for r in pl.routes.routes
                     ]:
-                        changed = True
-                        nxt[name] = dataclasses.replace(
+                        cand = dataclasses.replace(
                             pl,
                             routes=routes,
                             cost=cm.plan_cost(
                                 pl.program, sess.topology, pl.placement, routes
                             ),
+                            diagnostics=None,  # stale: routes changed
                         )
+                        if _verify_reason(cand) is not None:
+                            verify_rejections += 1
+                            nxt[name] = pl  # keep the last verified routes
+                        else:
+                            changed = True
+                            nxt[name] = cand
                     else:
                         nxt[name] = pl
                 rounds_run += 1
@@ -639,6 +672,9 @@ class Scheduler:
                     else:
                         continue
                     tuned = autotune.tune(plans[name], rounds=self.retune_rounds)
+                    if tuned.tuning is not None:
+                        # mutations the tuner's own verify hook vetoed
+                        verify_rejections += tuned.tuning.verify_rejections
                     score, rep = self._config_score(
                         {**plans, name: tuned}, arrivals, by_name, eng
                     )
@@ -706,6 +742,7 @@ class Scheduler:
             objective=self.objective,
             reroute_rounds_run=rounds_run,
             reroute_accepted=accepted,
+            verify_rejections=verify_rejections,
             hot_swaps=tuple(swaps),
             deadline_miss_ticks=miss,
             weighted_flow_ticks=round(wflow, 3),

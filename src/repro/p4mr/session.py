@@ -57,6 +57,9 @@ class CompileOptions:
     reroute_rounds: int | None = None
     autotune_rounds: int | None = None
     autotune_actions: tuple[str, ...] | None = None
+    # TargetProfile (or preset name, e.g. "tofino_like") for the verify
+    # pass's V3xx feasibility checks; None = V1xx/V2xx subset only
+    verify_profile: Any = None
     extra: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
@@ -95,6 +98,8 @@ class CompileOptions:
             out["autotune_rounds"] = self.autotune_rounds
         if self.autotune_actions is not None:
             out["autotune_actions"] = tuple(self.autotune_actions)
+        if self.verify_profile is not None:
+            out["verify_profile"] = self.verify_profile
         return out
 
 
@@ -387,6 +392,31 @@ class Session:
         if self.telemetry is not None:
             self.telemetry.record_compile(plan, name=key)
         return plan
+
+    # ------------------------------------------------------------- verify --
+    def verify(
+        self, *, profile=None, memory_headroom: float = 1.0
+    ) -> dict[str, list]:
+        """Re-verify every registered plan plus the cross-job fabric
+        booking, returning ``{job name: [Diagnostic, ...]}`` with the
+        multi-tenant V401 findings under ``"<merged>"``. Purely
+        diagnostic — nothing raises; feed ``repro.verify.errors_of`` to
+        gate. ``profile`` (a ``TargetProfile`` or preset name) adds the
+        V3xx feasibility checks per plan."""
+        from repro import verify as v
+
+        prof = v.resolve_profile(profile)
+        with self._scope("session.verify", jobs=len(self.plans)):
+            out = {
+                name: v.verify_plan(pl, profile=prof)
+                for name, pl in self.plans.items()
+            }
+            out["<merged>"] = v.verify_merged(
+                self.plans,
+                cost_model=self.cost_model,
+                memory_headroom=memory_headroom,
+            )
+        return out
 
     # ----------------------------------------------------------- simulate --
     def simulate(

@@ -190,8 +190,17 @@ def arbitrate_buckets(
     per candidate, or a callable ``(num_buckets) -> Program``; ``options``
     is the driver's per-pass options dict, applied to every candidate
     compile.
+
+    Infeasible candidates don't win and don't crash the arbitration: a
+    bucket count whose compile fails the static verifier (e.g. its
+    per-bucket reducer state overbooks a switch — the V205 §3 memory
+    check, not the lowering's soft budget) or cannot be placed at all is
+    dropped from the race. Only when *every* candidate is infeasible does
+    the arbitration raise, as a ``VerificationError`` aggregating each
+    candidate's diagnostics.
     """
-    from repro import compiler
+    from repro import compiler, verify
+    from repro.core.placement import PlacementError
 
     if not candidates:
         raise ValueError("need at least one candidate bucket count")
@@ -203,9 +212,10 @@ def arbitrate_buckets(
     else:
         make = lambda b: with_num_buckets(program_or_factory, b)  # noqa: E731
     plans = []
+    rejected: list = []  # diagnostics of every infeasible candidate
     for b in dict.fromkeys(candidates):
-        plans.append(
-            compiler.compile(
+        try:
+            pl = compiler.compile(
                 make(b),
                 topology,
                 cost_model=cost_model,
@@ -213,7 +223,28 @@ def arbitrate_buckets(
                 passes=passes,
                 options=dict(options) if options else None,
             )
-        )
+        except verify.VerificationError as e:
+            rejected.extend(e.diagnostics)
+            continue
+        except PlacementError as e:
+            rejected.append(
+                verify.Diagnostic(
+                    "V205", verify.Severity.ERROR, f"{b} bucket(s): {e}"
+                )
+            )
+            continue
+        # pipelines without the always-on pass (custom ``passes=``) still
+        # get the static check before a candidate may win the arbitration
+        diags = pl.diagnostics if pl.diagnostics is not None else verify.verify_plan(pl)
+        errs = verify.errors_of(diags)
+        if errs:
+            rejected.extend(diags)
+            continue
+        plans.append(pl)
+    if not plans:
+        if rejected:
+            raise verify.VerificationError(rejected)
+        raise ValueError("no feasible bucket count among candidates")
     if objective == "static":
         return min(plans, key=lambda pl: pl.cost.scalar)
     return min(plans, key=lambda pl: (pl.simulate_timing().time_s, pl.cost.scalar))

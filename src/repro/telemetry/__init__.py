@@ -120,6 +120,17 @@ class Telemetry:
             m.counter("tune.accepted").inc(
                 sum(1 for a in tuning.actions if a.accepted)
             )
+            if getattr(tuning, "verify_rejections", 0):
+                m.counter("verify.rejections").inc(tuning.verify_rejections)
+        diags = getattr(plan, "diagnostics", None)
+        if diags is not None:
+            # None = the verify pass never ran; () = ran, found nothing
+            m.counter("verify.runs").inc()
+            if diags:
+                m.counter("verify.diagnostics").inc(len(diags))
+                by_code = m.table("verify.by_code")
+                for d in diags:
+                    by_code.add(d.code, 1)
 
     def record_simulation(self, report, *, label: str = "combined") -> None:
         """Fold one ``SimReport`` (+ its timeline, if fabric telemetry

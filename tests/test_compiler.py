@@ -79,9 +79,31 @@ def test_pass_manager_rejects_unknown_pass_and_accepts_custom():
 
 
 def test_validate_pass_rejects_unattached_host():
+    from repro import verify
+
     src = 'A := store<uint_64>("ip_h9:path");\nB := SUM(A);\n'
-    with pytest.raises(KeyError, match="ip_h9.*h9"):
+    with pytest.raises(verify.VerificationError, match="ip_h9.*h9") as ei:
         compiler.compile(src, topology.paper_topology())
+    assert [d.code for d in ei.value.diagnostics] == ["V110"]
+
+
+def test_validate_pass_collects_all_errors_in_one_run():
+    """Satellite regression: validate reports every problem at once —
+    two unattached hosts and an input-less MAP — not just the first."""
+    from repro import verify
+
+    src = (
+        'A := store<uint_64>("ip_h9:path");\n'
+        'B := store<uint_64>("ip_h8:path");\n'
+        "C := SUM(A, B);\n"
+        'OUT := COLLECT(C, "h7");\n'
+    )
+    with pytest.raises(verify.VerificationError) as ei:
+        compiler.compile(src, topology.paper_topology())
+    codes = sorted(d.code for d in ei.value.diagnostics)
+    assert codes == ["V110", "V110", "V110"]
+    subjects = sorted(d.subject for d in ei.value.diagnostics)
+    assert subjects == ["A", "B", "OUT"]
 
 
 def test_compile_best_never_worse_than_either_pipeline():

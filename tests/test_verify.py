@@ -1,0 +1,552 @@
+"""repro.verify — seeded-violation (mutation-injection) suite + the
+zero-false-positive sweep.
+
+Every checker gets a fixture that corrupts a known-good program/plan and
+asserts *exactly that* diagnostic code fires; the sweep asserts all
+shipped scenarios, examples and both bench topologies verify clean under
+``unconstrained()`` (no false positives). The autotune/scheduler tests
+pin the post-mutation hook: invariant-breaking candidates are rejected
+and counted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import pytest
+
+from repro import compiler, p4mr, verify
+from repro.core import dag, dsl, primitives as prim, topology, wordcount
+from repro.core.routing import Route, RoutingTable
+from repro.verify import Severity
+
+EXAMPLES = Path(__file__).resolve().parent.parent / "examples"
+
+PAPER_SRC = dsl.PAPER_SOURCE + 'OUT := COLLECT(E, "h6");\n'
+
+
+def paper_plan():
+    return compiler.compile(PAPER_SRC, topology.paper_topology())
+
+
+def shuffle_plan():
+    return compiler.compile(
+        (EXAMPLES / "shuffle_sum.p4mr").read_text(), topology.paper_topology()
+    )
+
+
+def codes(diags):
+    return sorted(d.code for d in diags)
+
+
+def error_codes(diags):
+    return sorted(d.code for d in diags if d.severity is Severity.ERROR)
+
+
+# ---------------------------------------------------------------- V1xx ----
+def test_v101_cycle_fires_with_counterexample_path():
+    a = prim.MapFn(name="A", src="B")
+    b = prim.MapFn(name="B", src="A")
+    p = dag.Program(nodes={"A": a, "B": b})
+    diags = verify.verify_program(p)
+    assert "V101" in codes(diags)
+    (cyc,) = [d for d in diags if d.code == "V101"]
+    assert "A" in cyc.message and "B" in cyc.message and "->" in cyc.message
+
+
+def test_v102_undefined_dep_and_label_mismatch():
+    store = prim.Store(name="A", host="h1", path="p")
+    ghost = prim.MapFn(name="M", src="NOPE")
+    p = dag.Program(nodes={"A": store, "M": ghost})
+    assert codes(verify.verify_program(p)) == ["V102"]
+
+    aliased = dag.Program(nodes={"A": store, "X": prim.MapFn(name="M2", src="A")})
+    assert "V102" in codes(verify.verify_program(aliased))
+
+
+def test_v103_fanin_beyond_cost_model_bound_warns():
+    p = dag.Program()
+    for i in range(6):
+        p.store(f"s{i}", host=f"h{i}")
+    p.sum("R", *[f"s{i}" for i in range(6)], state_width=4)
+    cm = compiler.CostModel(max_fanin=2)
+    diags = verify.verify_program(p, cost_model=cm)
+    assert codes(diags) == ["V103"]
+    (d,) = diags
+    assert d.severity is Severity.WARNING and d.subject == "R"
+    # no cost model → V103 not applicable (pre-rebalance validate)
+    assert verify.verify_program(p) == []
+
+
+def _bucket_program(offsets=(0, 4, 8, 12), widths=(4, 4, 4, 4)):
+    nodes = [prim.Store(name="S", host="h1", path="p", items=16)]
+    for b, (off, w) in enumerate(zip(offsets, widths)):
+        nodes.append(
+            prim.ShuffleBucket(
+                name=f"K__b{b}", src="S", bucket=b, num_buckets=4, offset=off, width=w
+            )
+        )
+        nodes.append(
+            prim.Reduce(
+                name=f"R__p{b}", srcs=(f"K__b{b}",),
+                kind=prim.ReduceKind.SUM, state_width=w,
+            )
+        )
+    nodes.append(prim.Concat(name="R", srcs=tuple(f"R__p{b}" for b in range(4))))
+    nodes.append(prim.Collect(name="OUT", src="R", sink_host="h2"))
+    return dag.Program.from_nodes(nodes)
+
+
+def test_v104_gap_and_overlap_in_bucket_coverage():
+    assert verify.verify_program(_bucket_program()) == []  # known-good
+    gap = _bucket_program(offsets=(0, 6, 8, 12))  # [4,6) uncovered
+    gap_diags = [d for d in verify.verify_program(gap) if d.code == "V104"]
+    assert gap_diags and "[4, 6)" in gap_diags[0].message
+    overlap = _bucket_program(offsets=(0, 2, 8, 12))  # [2,4) covered twice
+    over_diags = [d for d in verify.verify_program(overlap) if d.code == "V104"]
+    assert over_diags and "more than once" in over_diags[0].message
+
+
+def test_v104_duplicate_bucket_index():
+    p = _bucket_program()
+    dup = dict(p.nodes)
+    dup["K__b9"] = prim.ShuffleBucket(
+        name="K__b9", src="S", bucket=0, num_buckets=4, offset=0, width=4
+    )
+    dup["R__p9"] = prim.Reduce(
+        name="R__p9", srcs=("K__b9",), kind=prim.ReduceKind.SUM, state_width=4
+    )
+    diags = verify.verify_program(dag.Program(nodes=dup))
+    assert any(
+        d.code == "V104" and "defined by both" in d.message for d in diags
+    )
+
+
+def test_v105_concat_drops_a_bucket_reducer():
+    plan = shuffle_plan()
+    assert plan.shuffle_meta  # the lowering recorded its reducers
+    label = next(iter(plan.shuffle_meta))
+    concat = plan.program.nodes[label]
+    assert isinstance(concat, prim.Concat) and len(concat.srcs) >= 2
+    broken = dict(plan.program.nodes)
+    broken[label] = dataclasses.replace(concat, srcs=concat.srcs[:-1])
+    mutated = dataclasses.replace(
+        plan, program=dag.Program(nodes=broken), diagnostics=None
+    )
+    diags = verify.verify_plan(mutated)
+    assert "V105" in error_codes(diags)
+    (d,) = [x for x in diags if x.code == "V105"]
+    assert "drops bucket reducer" in d.message
+
+
+def test_v105_duplicate_concat_sources():
+    p = _bucket_program()
+    broken = dict(p.nodes)
+    concat = broken["R"]
+    broken["R"] = dataclasses.replace(
+        concat, srcs=(concat.srcs[0],) + concat.srcs
+    )
+    diags = verify.verify_program(dag.Program(nodes=broken))
+    assert any(d.code == "V105" for d in diags)
+
+
+def test_v106_structural_errors_all_collected():
+    empty = dag.Program(nodes={})
+    assert codes(verify.verify_program(empty)) == ["V106"]
+    p = dag.Program(nodes={
+        "A": prim.Store(name="A", host="h1", path="p"),
+        "R": prim.Reduce(name="R", srcs=(), kind=prim.ReduceKind.SUM),
+        "C": prim.Concat(name="C", srcs=()),
+    })
+    assert codes(verify.verify_program(p)) == ["V106", "V106"]
+
+
+def test_v110_unattached_host():
+    p = dag.Program()
+    p.store("A", host="nowhere")
+    p.map("M", "A")
+    diags = verify.verify_program(p, topology=topology.paper_topology())
+    assert codes(diags) == ["V110"]
+
+
+# ---------------------------------------------------------------- V2xx ----
+def test_v201_nonexistent_switch_and_unplaced_node():
+    plan = paper_plan()
+    assignment = dict(plan.placement.assignment)
+    victim = next(iter(assignment))
+    assignment[victim] = "S99"
+    missing = sorted(assignment)[-1]
+    if missing == victim:
+        missing = sorted(assignment)[0]
+    del assignment[missing]
+    mutated = dataclasses.replace(
+        plan,
+        placement=dataclasses.replace(plan.placement, assignment=assignment),
+        diagnostics=None,
+    )
+    diags = verify.verify_plan(mutated)
+    assert "V201" in error_codes(diags)
+    subjects = {d.subject for d in diags if d.code == "V201"}
+    assert victim in subjects and missing in subjects
+
+
+def test_v202_pin_not_honored():
+    plan = shuffle_plan()
+    pinned = next(iter(plan.pins))
+    other = next(
+        sw for sw in plan.topology.switches if sw != plan.pins[pinned]
+    )
+    assignment = dict(plan.placement.assignment)
+    assignment[pinned] = other
+    mutated = dataclasses.replace(
+        plan,
+        placement=dataclasses.replace(plan.placement, assignment=assignment),
+        diagnostics=None,
+    )
+    assert "V202" in error_codes(verify.verify_plan(mutated))
+
+
+def test_v203_cyclic_and_link_invalid_routes():
+    plan = paper_plan()
+    r0 = plan.routes.routes[0]
+    looped = dataclasses.replace(
+        plan,
+        routes=RoutingTable(
+            routes=[dataclasses.replace(r0, path=list(r0.path) + [r0.path[0]])]
+            + plan.routes.routes[1:]
+        ),
+        diagnostics=None,
+    )
+    diags = [d for d in verify.verify_plan(looped) if d.code == "V203"]
+    assert diags and any("twice" in d.message for d in diags)
+
+    # a hop between two non-adjacent switches (paper fabric: S1–S3)
+    bad_hop = dataclasses.replace(
+        plan,
+        routes=RoutingTable(
+            routes=[Route(r0.src_label, r0.dst_label, ["S1", "S3"])]
+            + plan.routes.routes[1:]
+        ),
+        diagnostics=None,
+    )
+    diags = [d for d in verify.verify_plan(bad_hop) if d.code == "V203"]
+    assert any("not a link" in d.message for d in diags)
+
+
+def test_v204_black_hole_when_route_dropped():
+    plan = paper_plan()
+    mutated = dataclasses.replace(
+        plan,
+        routes=RoutingTable(routes=plan.routes.routes[1:]),
+        diagnostics=None,
+    )
+    diags = verify.verify_plan(mutated)
+    dropped = plan.routes.routes[0]
+    assert any(
+        d.code == "V204" and d.edge == (dropped.src_label, dropped.dst_label)
+        for d in diags
+    )
+
+
+def test_v205_shrunk_memory_budget_overbooks_switch():
+    plan = shuffle_plan()
+    used = verify.switch_state_bytes(
+        plan.program, plan.placement.assignment, plan.cost_model.item_bytes
+    )
+    assert used, "shuffle plan must place reducer state"
+    tight = dataclasses.replace(
+        plan,
+        cost_model=dataclasses.replace(
+            plan.cost_model, switch_memory_bytes=max(used.values()) - 1
+        ),
+        diagnostics=None,
+    )
+    diags = [d for d in verify.verify_plan(tight) if d.code == "V205"]
+    assert diags and "exceeds the switch memory budget" in diags[0].message
+
+
+# ---------------------------------------------------------------- V3xx ----
+def test_v301_pipeline_stage_count_exceeded():
+    # two stateful reduces pinned onto one switch vs a 1-stage target
+    p = dag.Program()
+    p.store("a", host="h1")
+    p.store("b", host="h2")
+    p.store("c", host="h3")
+    p.sum("r1", "a", "b", state_width=1)
+    p.sum("r2", "r1", "c", state_width=1)
+    p.collect("OUT", "r2", sink_host="h6")
+    plan = compiler.compile(
+        p,
+        topology.paper_topology(),
+        passes=compiler.UNOPTIMIZED_PASSES,
+        pins={"r1": "S2", "r2": "S2"},
+    )
+    profile = verify.TargetProfile(name="one-stage", pipeline_stages=1)
+    diags = verify.verify_plan(plan, profile=profile)
+    assert "V301" in error_codes(diags)
+    assert verify.verify_plan(plan, profile=verify.unconstrained()) == []
+    assert verify.verify_plan(shuffle_plan(), profile=verify.unconstrained()) == []
+
+
+def test_v302_stage_and_total_memory_exceeded():
+    plan = shuffle_plan()
+    per_stage = verify.TargetProfile(name="tiny-stage", stage_memory_bytes=1)
+    diags = verify.verify_plan(plan, profile=per_stage)
+    assert "V302" in error_codes(diags)
+    total = verify.TargetProfile(
+        name="tiny-total", pipeline_stages=1, stage_memory_bytes=8
+    )
+    msgs = [d.message for d in verify.verify_plan(plan, profile=total) if d.code == "V302"]
+    assert msgs
+
+
+def test_v303_recirculation_budget_exceeded():
+    # a 6-way single reduce needs 5 recirculations on its switch
+    p = dag.Program()
+    for i in range(6):
+        p.store(f"s{i}", host=f"h{(i % 6) + 1}")
+    p.sum("R", *[f"s{i}" for i in range(6)], state_width=1)
+    p.collect("OUT", "R", sink_host="h6")
+    plan = compiler.compile(p, topology.paper_topology(), passes=compiler.UNOPTIMIZED_PASSES)
+    profile = verify.TargetProfile(name="no-recirc", recirculation_budget=2)
+    diags = verify.verify_plan(plan, profile=profile)
+    assert "V303" in error_codes(diags)
+
+
+def test_tofino_like_preset_and_resolve():
+    prof = verify.tofino_like()
+    assert prof.pipeline_stages == 12
+    assert prof.total_memory_bytes == 12 * 128 * 1024
+    assert verify.resolve_profile("tofino_like") == prof
+    assert verify.resolve_profile(None) is None
+    with pytest.raises(ValueError, match="unknown target profile"):
+        verify.resolve_profile("nonsense")
+    with pytest.raises(ValueError, match="must be >= 1"):
+        verify.TargetProfile(pipeline_stages=0)
+
+
+# ---------------------------------------------------------------- V4xx ----
+def test_v401_merged_tenants_double_book_a_switch():
+    topo = topology.paper_topology()
+    sess = p4mr.Session(topo)
+    src = (
+        'A := store<uint_64>("ip_h1:a", 64);\n'
+        'B := store<uint_64>("ip_h2:b", 64);\n'
+        "R := SUM<64>(A, B);\n"
+        'OUT := COLLECT(R, "h6");\n'
+    )
+    sess.compile(src, name="t1")
+    sess.compile(src, name="t2")
+    per_plan = verify.switch_state_bytes(
+        sess.plans["t1"].program,
+        sess.plans["t1"].placement.assignment,
+        sess.cost_model.item_bytes,
+    )
+    # each tenant fits solo; together they double-book the switch
+    tight = dataclasses.replace(
+        sess.cost_model, switch_memory_bytes=max(per_plan.values())
+    )
+    diags = verify.verify_merged(sess.plans, cost_model=tight)
+    assert error_codes(diags) == ["V401"]
+    assert "merged tenants book" in diags[0].message
+    # and with the real (1 MiB) budget the same merge is clean
+    assert verify.verify_merged(sess.plans, cost_model=sess.cost_model) == []
+
+
+# -------------------------------------------------- integration layers ----
+def test_verify_pass_always_on_and_records_diagnostics():
+    plan = paper_plan()
+    assert plan.diagnostics == ()
+    assert "verify" in [r.name for r in plan.trace]
+    assert "verify" in plan.pass_timings_us()
+
+
+def test_verify_pass_rejects_corrupt_custom_pass_output():
+    """A pipeline pass that corrupts the program is caught by the
+    always-on verify pass at compile time."""
+
+    def corrupt(ctx):
+        broken = dict(ctx.plan.program.nodes)
+        victim = next(n for n in broken.values() if isinstance(n, prim.Concat))
+        broken[victim.name] = dataclasses.replace(victim, srcs=victim.srcs[:-1])
+        ctx.plan = dataclasses.replace(
+            ctx.plan, program=dag.Program(nodes=broken)
+        )
+        return "corrupted"
+
+    src = (EXAMPLES / "shuffle_sum.p4mr").read_text()
+    passes = tuple(
+        p if p != "verify" else corrupt for p in compiler.DEFAULT_PASSES
+    ) + ("verify",)
+    with pytest.raises(verify.VerificationError) as ei:
+        compiler.compile(src, topology.paper_topology(), passes=passes)
+    assert "V105" in codes(ei.value.diagnostics)
+
+
+def test_compile_options_verify_profile_is_forwarded():
+    opts = p4mr.CompileOptions(verify_profile="tofino_like")
+    assert opts.driver_options()["verify_profile"] == "tofino_like"
+    sess = p4mr.Session(topology.paper_topology())
+    plan = sess.compile(PAPER_SRC, name="paper", options=opts)
+    assert plan.diagnostics == ()
+    # an unsatisfiable profile turns the same compile into a verify error
+    bad = p4mr.CompileOptions(
+        verify_profile=verify.TargetProfile(name="zero", stage_memory_bytes=1)
+    )
+    with pytest.raises(verify.VerificationError):
+        sess.compile(PAPER_SRC, name="paper2", options=bad)
+
+
+def test_autotune_rejects_and_counts_invariant_breaking_mutations(monkeypatch):
+    """The post-mutation hook: corrupt every candidate build and watch
+    the tuner skip them all (and count them) instead of accepting one."""
+    from repro import autotune
+    from repro.autotune import actions as act
+
+    plan = shuffle_plan()
+    real_propose = act.propose
+
+    def sabotaged(pl, families):
+        out = []
+        for c in real_propose(pl, families):
+            build = c.build
+
+            def broken(build=build):
+                cand = build()
+                assignment = dict(cand.placement.assignment)
+                assignment[next(iter(assignment))] = "S99"
+                return dataclasses.replace(
+                    cand,
+                    placement=dataclasses.replace(
+                        cand.placement, assignment=assignment
+                    ),
+                    diagnostics=None,
+                )
+
+            out.append(dataclasses.replace(c, build=broken))
+        return out
+
+    monkeypatch.setattr("repro.autotune.propose", sabotaged)
+    tuned = autotune.tune(plan, rounds=2)
+    rep = tuned.tuning
+    assert rep.verify_rejections > 0
+    assert rep.accepted == []  # nothing invariant-breaking got in
+    assert tuned.simulate_timing().time_s == plan.simulate_timing().time_s
+    assert any(a.note.startswith("verify:") for a in rep.actions)
+    assert rep.to_dict()["verify_rejections"] == rep.verify_rejections
+    assert "verify-rejected" in rep.summary()
+
+
+def test_scheduler_report_counts_verify_rejections():
+    topo = topology.paper_topology()
+    sess = p4mr.Session(topo)
+    sched = p4mr.Scheduler(sess, reroute_rounds=1, retune_rounds=0)
+    sched.submit(PAPER_SRC, name="a")
+    sched.submit(PAPER_SRC, name="b")
+    rep = sched.run()
+    assert rep.verify_rejections == 0  # healthy fleet: nothing vetoed
+    assert set(rep.admitted) == {"a", "b"}
+
+
+def test_arbitrate_buckets_drops_infeasible_candidate():
+    """Satellite bugfix: a candidate whose bucket count overbooks switch
+    memory loses by verifier rejection instead of crashing/winning."""
+    from repro import shuffle
+
+    topo = topology.TorusTopology(dims=(8,))
+    prog = wordcount.wordcount_shuffle_program(
+        8, 256, num_buckets=8,
+        hosts=[f"d{i}" for i in range(8)], sink_host="d0",
+    )
+    # 8 buckets → 32-wide (256B) reducers fit a 384B switch; 2 buckets
+    # → 128-wide (1024B) reducers cannot fit anywhere
+    cm = compiler.CostModel(switch_memory_bytes=384)
+    plan = shuffle.arbitrate_buckets(
+        lambda b: wordcount.wordcount_shuffle_program(
+            8, 256, num_buckets=b,
+            hosts=[f"d{i}" for i in range(8)], sink_host="d0",
+        ),
+        topo,
+        [2, 8],
+        cost_model=cm,
+    )
+    meta = next(iter(plan.shuffle_meta.values()))
+    assert meta["num_buckets"] == 8  # the infeasible 2-bucket lost
+    assert verify.errors_of(verify.verify_plan(plan)) == []
+
+
+def test_arbitrate_buckets_raises_when_all_candidates_infeasible():
+    from repro import shuffle
+
+    topo = topology.TorusTopology(dims=(8,))
+    cm = compiler.CostModel(switch_memory_bytes=16)  # fits nothing
+    with pytest.raises(verify.VerificationError):
+        shuffle.arbitrate_buckets(
+            lambda b: wordcount.wordcount_shuffle_program(
+                8, 256, num_buckets=b,
+                hosts=[f"d{i}" for i in range(8)], sink_host="d0",
+            ),
+            topo,
+            [2, 4],
+            cost_model=cm,
+        )
+
+
+def test_telemetry_counts_verify_runs_and_diagnostics():
+    sess = p4mr.Session(topology.paper_topology(), telemetry=True)
+    sess.compile(PAPER_SRC, name="paper")
+    m = sess.telemetry.metrics
+    assert m.counter("verify.runs").value == 1
+    assert m.counter("verify.diagnostics").value == 0  # clean compile
+
+
+def test_cli_exit_codes_and_output(capsys):
+    from repro.verify.__main__ import main
+
+    assert main([str(EXAMPLES / "paper_fig2.p4mr")]) == 0
+    out = capsys.readouterr().out
+    assert "clean" in out
+
+    bad = EXAMPLES / "paper_fig2.p4mr"
+    assert main([str(bad.with_name("no_such.p4mr"))]) == 1
+
+
+def test_cli_reports_diagnostics_for_broken_source(tmp_path, capsys):
+    from repro.verify.__main__ import main
+
+    src = tmp_path / "broken.p4mr"
+    src.write_text('A := store<uint_64>("ip_h9:x");\nB := SUM(A);\n')
+    assert main([str(src)]) == 1
+    out = capsys.readouterr().out
+    assert "V110" in out and "FAIL" in out
+
+
+# ------------------------------------------- zero-false-positive sweep ----
+@pytest.mark.parametrize("path", sorted(EXAMPLES.glob("*.p4mr")), ids=lambda p: p.name)
+def test_sweep_examples_verify_clean(path):
+    plan = compiler.compile(path.read_text(), topology.paper_topology())
+    assert verify.errors_of(verify.verify_plan(plan, profile=verify.unconstrained())) == []
+
+
+@pytest.mark.parametrize("scenario", ["s1_host", "s2_in_net", "s3_in_net_map"])
+def test_sweep_scenarios_verify_clean(scenario):
+    from repro.core.scenarios import compile_scenario
+
+    plan = compile_scenario(4, scenario, state_width=4)
+    assert verify.errors_of(verify.verify_plan(plan, profile=verify.unconstrained())) == []
+
+
+@pytest.mark.parametrize("make_topo", [
+    lambda: topology.TorusTopology(dims=(8,)),
+    lambda: topology.fat_tree_topology(4),
+], ids=["torus8", "fat_tree4"])
+def test_sweep_bench_topologies_verify_clean(make_topo):
+    topo = make_topo()
+    hosts = sorted(topo.host_uplink)[:8] if hasattr(topo, "host_uplink") else [
+        f"d{i}" for i in range(8)
+    ]
+    prog = wordcount.wordcount_program(8, 64, hosts=hosts, sink_host=hosts[0])
+    for passes in (compiler.DEFAULT_PASSES, compiler.UNOPTIMIZED_PASSES):
+        plan = compiler.compile(prog, topo, passes=passes)
+        assert plan.diagnostics == ()
+        assert verify.verify_plan(plan, profile=verify.unconstrained()) == []
